@@ -1,0 +1,40 @@
+"""Shared benchmark plumbing.
+
+Methodology note (CPU container, TPU v5e target): "time" columns are derived
+from the three-term roofline cost model over the *exact* FLOP/byte counts of
+each kernel (the same model the autotuner uses, validated against compiled-
+HLO counts in the dry-run); wall-clock on this host would measure the Python
+interpreter, not the TPU.  Functional equivalence of every fused kernel is
+asserted in interpret mode before its row is reported — a row in these
+tables is a kernel that RUNS and matches its oracle.
+"""
+from __future__ import annotations
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import jax
+import numpy as np
+
+
+def check_pair_numerics(opA, mkA, refA, opB, mkB, refB, sched) -> float:
+    """Build the fused kernel, run in interpret mode, return max |err|."""
+    from repro.core import hfuse
+    xa = mkA(jax.random.PRNGKey(0))
+    xb = mkB(jax.random.PRNGKey(1))
+    fused = hfuse.generate(opA, opB, sched, interpret=True)
+    outs = fused(*xa, *xb)
+    wa, wb = refA(*xa), refB(*xb)
+    wa = wa if isinstance(wa, tuple) else (wa,)
+    wb = wb if isinstance(wb, tuple) else (wb,)
+    err = 0.0
+    for got, want in zip(outs, (*wa, *wb)):
+        err = max(err, float(np.max(np.abs(
+            np.asarray(got, np.float32) - np.asarray(want, np.float32)))))
+    return err
+
+
+def csv_row(*cols):
+    print(",".join(str(c) for c in cols), flush=True)

@@ -1,0 +1,82 @@
+"""Paper Fig. 7: kernel-pair speedup vs native, across execution-time ratios.
+
+16 pairs (10 DL + 6 crypto).  For each pair we sweep the workload of the
+first kernel to hit execution-time ratios ~{1/4, 1/2, 1, 2, 4} and report:
+  VFuse  — concatenated-grid kernel (no interleave; saves launch only)
+  Naive  — horizontal fusion, even 1:1 interleave, no tuning
+  HFuse  — autotuned schedule (+VMEM cap when needed) — the paper's system
+
+Numerics of the HFuse kernel are asserted against the oracles for the
+representative (ratio≈1) point of every pair.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+
+from benchmarks.common import check_pair_numerics, csv_row
+from repro.core import autotuner
+from repro.core.cost_model import Schedule, hfused_cost, native_time
+from repro.kernels import paper_suite as ps
+
+RATIOS = (0.25, 0.5, 1.0, 2.0, 4.0)
+
+# reduced-size kwargs for the numerics check (interpret mode is O(grid) slow)
+SMALL = dict(
+    maxpool=dict(R=256, C=128, bm=64), bnstats=dict(R=256, C=128, bm=64),
+    upsample=dict(R=256, C=128, bm=64), im2col=dict(R=256, C=128, bm=64),
+    hist=dict(R=256, C=128, bm=32), ethash_like=dict(R_dag=512, bm=128),
+    sha_like=dict(R=256, bm=64), blake_like=dict(R=256, bm=64),
+    blake2b_like=dict(R=256, bm=64),
+)
+
+
+def scaled(name: str, scale: float):
+    """Scale a kernel's row-count to scale its native time."""
+    f = ps.ALL_KERNELS[name]
+    base_R = {"ethash_like": 65536}.get(name, None)
+    if name == "ethash_like":
+        R = max(1024, int(base_R * scale) // 512 * 512)
+        return f(R_dag=R)
+    op0, _, _ = f()
+    R0 = op0.inputs[0].shape[0]
+    bm = op0.inputs[0].block_shape[0]
+    R = max(bm, int(R0 * scale) // bm * bm)
+    return f(R=R)
+
+
+def run(check_numerics: bool = True):
+    csv_row("pair", "ratio", "t_native_us", "vfuse_speedup_pct",
+            "naive_speedup_pct", "hfuse_speedup_pct", "hfuse_sched",
+            "vmem_cap", "max_err")
+    for a_name, b_name in ps.paper_pairs():
+        for ratio in RATIOS:
+            opB, mkB, refB = ps.ALL_KERNELS[b_name]()
+            opA0, _, _ = ps.ALL_KERNELS[a_name]()
+            # scale A so t_native(A) = ratio * t_native(B)
+            scale = ratio * opB.t_native / max(opA0.t_native, 1e-30)
+            opA, mkA, refA = scaled(a_name, scale)
+
+            t_native = native_time(opA) + native_time(opB)
+            naive = hfused_cost(opA, opB, Schedule(1, 1))
+            res = autotuner.search((opA, opB))
+            best = res.best
+            err = float("nan")
+            if check_numerics and ratio == 1.0:
+                sA, mA, rA = ps.ALL_KERNELS[a_name](**SMALL[a_name])
+                sB, mB, rB = ps.ALL_KERNELS[b_name](**SMALL[b_name])
+                err = check_pair_numerics(sA, mA, rA, sB, mB, rB, best.sched)
+                assert err < 2e-2, (a_name, b_name, err)
+            csv_row(f"{a_name}+{b_name}", ratio,
+                    round(t_native * 1e6, 2),
+                    round(100 * (t_native - naive.t_vfused) / t_native, 1),
+                    round(naive.speedup_pct(), 1),
+                    round(best.est.speedup_pct(), 1),
+                    f"{best.sched.ra}:{best.sched.rb}",
+                    best.vmem_cap or 0,
+                    f"{err:.1e}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,32 @@
+"""Paper Fig. 8: per-kernel resource metrics.
+
+GPU metrics have no TPU equivalents; the analogous roofline quantities:
+  issue-slot utilization  -> engine utilization  min(tc,tm)/max(tc,tm)
+  MemInst stall %         -> memory-bound fraction  tm/(tc+tm)
+  occupancy               -> VMEM pipeline headroom  budget/(2*working set)
+"""
+from __future__ import annotations
+
+from benchmarks.common import csv_row
+from repro.core.cost_model import VMEM_BUDGET
+from repro.kernels import paper_suite as ps
+
+
+def run():
+    csv_row("kernel", "grid", "flops", "hbm_bytes", "arith_intensity",
+            "bound", "t_native_us", "engine_util_pct", "membound_frac_pct",
+            "vmem_headroom_x")
+    for name, f in ps.ALL_KERNELS.items():
+        op, _, _ = f()
+        tc, tm = op.t_compute, op.t_memory
+        util = 100.0 * min(tc, tm) / max(tc, tm)
+        memfrac = 100.0 * tm / (tc + tm)
+        headroom = VMEM_BUDGET / (2.0 * op.vmem_bytes)
+        csv_row(name, op.grid, f"{op.flops:.3e}", f"{op.hbm_bytes:.3e}",
+                round(op.arithmetic_intensity, 2), op.bound,
+                round(op.t_native * 1e6, 2), round(util, 1),
+                round(memfrac, 1), round(headroom, 1))
+
+
+if __name__ == "__main__":
+    run()

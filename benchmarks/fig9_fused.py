@@ -1,0 +1,60 @@
+"""Paper Fig. 9: fused-kernel metrics with and without the resource cap.
+
+The register bound maps to the VMEM working-set control (DESIGN.md §2):
+  N-RegCap — large MXU-efficient blocks; the fused pair may exceed the
+             double-buffered VMEM budget -> pipelining degrades (the
+             occupancy cliff; overlap_eff < 100, speedup can go negative,
+             exactly the paper's Blake256+Blake2B -96.5% pathology).
+  RegCap   — blocks halved until the pair co-resides (the paper's
+             computed register bound r0): occupancy recovered at a small
+             per-block efficiency cost (modeled via the ramp term).
+
+Reported per pair at the representative (ratio≈1) workload.
+"""
+from __future__ import annotations
+
+from benchmarks.common import csv_row
+from repro.core import autotuner
+from repro.core.cost_model import VMEM_BUDGET, native_time
+from repro.kernels import paper_suite as ps
+
+# wide-tensor configs that create genuine VMEM pressure when fused
+BIG = dict(
+    maxpool=dict(R=16384, C=2048, bm=2048),
+    bnstats=dict(R=16384, C=2048, bm=2048),
+    upsample=dict(R=8192, C=2048, bm=2048),
+    im2col=dict(R=8192, C=2048, bm=1024),
+    hist=dict(R=8192, C=1024, bm=64),
+    ethash_like=dict(R_dag=262144, bm=4096),
+    sha_like=dict(R=16384, bm=2048),
+    blake_like=dict(R=16384, bm=2048),
+    blake2b_like=dict(R=16384, bm=2048),
+)
+
+
+def halved(name):
+    kw = dict(BIG[name])
+    kw["bm"] = max(32, kw["bm"] // 4)
+    return kw
+
+
+def run():
+    csv_row("pair", "type", "speedup_pct", "overlap_eff_pct",
+            "vmem_mb", "fits", "sched")
+    for a_name, b_name in ps.paper_pairs():
+        for typ, mk in (("N-RegCap", BIG), ("RegCap", None)):
+            kwa = BIG[a_name] if typ == "N-RegCap" else halved(a_name)
+            kwb = BIG[b_name] if typ == "N-RegCap" else halved(b_name)
+            opA, _, _ = ps.ALL_KERNELS[a_name](**kwa)
+            opB, _, _ = ps.ALL_KERNELS[b_name](**kwb)
+            res = autotuner.search((opA, opB))
+            est = res.best.est
+            csv_row(f"{a_name}+{b_name}", typ,
+                    round(est.speedup_pct(), 1),
+                    round(100 * est.overlap_eff, 1),
+                    round(est.vmem_bytes / 2 ** 20, 1), est.vmem_ok,
+                    f"{res.best.sched.ra}:{res.best.sched.rb}")
+
+
+if __name__ == "__main__":
+    run()

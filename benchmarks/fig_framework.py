@@ -1,0 +1,125 @@
+"""Beyond-paper table: horizontal fusion applied inside the framework
+(the instances from DESIGN.md §4), with cost-model gains + numerics checks.
+
+  dual_stream_decode — decode attention (memory) ⊕ FFN matmul (compute):
+                       the paper's Ethash+Blake scenario inside a serving
+                       step (two phase-shifted half-batches).
+  adam_overlap       — optimizer update (memory) ⊕ dW matmul (compute):
+                       backward/optimizer overlap.
+  moe_gmm            — E independent expert FFNs as ONE kernel vs E
+                       launches (the launch-amortization footnote at scale).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import csv_row
+from repro.core import autotuner, hfuse
+from repro.core.cost_model import Schedule, hfused_cost, native_time
+from repro.kernels import ref
+from repro.kernels.adam import adamw_op
+from repro.kernels.decode_attention import decode_attention_op
+from repro.kernels.matmul import matmul_1d_op
+from repro.kernels.moe_gmm import moe_gmm_op
+
+
+def _verify_dual_stream():
+    """Numerics: fused (decode_attn ⊕ matmul) == separate (reduced sizes)."""
+    B, S, H, Hkv, D = 2, 512, 8, 2, 64
+    att = decode_attention_op(B=B, S=S, H=H, Hkv=Hkv, D=D,
+                              dtype=jnp.float32, ck=128)
+    mm = matmul_1d_op(256, 128, 256, dtype=jnp.float32, bm=64)
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 5)
+    q = jax.random.normal(ks[0], (B, H, D), jnp.float32)
+    kc = jax.random.normal(ks[1], (B, S, Hkv, D), jnp.float32)
+    vc = jax.random.normal(ks[2], (B, S, Hkv, D), jnp.float32)
+    x = jax.random.normal(ks[3], (256, 128), jnp.float32)
+    w = jax.random.normal(ks[4], (128, 256), jnp.float32) * 0.1
+    res = autotuner.search((att, mm))
+    fused = hfuse.generate(att, mm, res.best.sched, interpret=True)
+    outs = fused(q, kc, vc, x, w)
+    err = max(
+        float(np.max(np.abs(np.asarray(outs[0])
+                            - np.asarray(ref.decode_attention(q, kc, vc, S))))),
+        float(np.max(np.abs(np.asarray(outs[3])
+                            - np.asarray(ref.matmul(x, w))))))
+    return res, err
+
+
+def run():
+    csv_row("instance", "memory_op", "compute_op", "sched",
+            "native_us", "hfused_us", "speedup_pct", "max_err")
+
+    # 1) chunked-prefill ⊕ decode overlap (the dual-stream serving mode):
+    #    a decode wave's attention (memory-bound KV streaming, 128 seqs x
+    #    32k cache per chip) fuses with a prefill chunk's FFN matmul
+    #    (2048 tokens -> compute-bound).  NOTE the honest finding recorded
+    #    in EXPERIMENTS §Paper-validation: decode FFN itself is memory-
+    #    bound at serving batch sizes (weight streaming), so decode⊕decode
+    #    fusion gains ~nothing on TPU — the profitable pairing is
+    #    prefill-compute x decode-memory, the paper's scenario test applied
+    #    through our planner.
+    att = decode_attention_op(B=16, S=32768, H=8, Hkv=2, D=64,
+                              dtype=jnp.bfloat16, ck=2048)  # 16 seqs/chip wave
+    mm = matmul_1d_op(2048, 2048, 8192, dtype=jnp.bfloat16, bm=128)  # 2k-token prefill chunk
+    res = autotuner.search((att, mm))
+    _, err = _verify_dual_stream()
+    csv_row("prefill_decode_overlap", att.name, mm.name,
+            f"{res.best.sched.ra}:{res.best.sched.rb}",
+            round((native_time(att) + native_time(mm)) * 1e6, 1),
+            round(res.best.est.t_hfused * 1e6, 1),
+            round(res.best.est.speedup_pct(), 1), f"{err:.1e}")
+
+    # 2) optimizer/backward overlap: Adam update of a 128M-param slice
+    #    (memory) ⊕ a dW matmul (compute)
+    adam = adamw_op(R=1_048_576, dtype=jnp.bfloat16, bm=4096)  # 134M params
+    dw = matmul_1d_op(4096, 4096, 4096, dtype=jnp.bfloat16, bm=512)
+    res2 = autotuner.search((adam, dw))
+    # numerics at reduced size
+    adam_s = adamw_op(R=512, dtype=jnp.float32, bm=128)
+    dw_s = matmul_1d_op(256, 128, 128, dtype=jnp.float32, bm=64)
+    key = jax.random.PRNGKey(1)
+    sc = jnp.zeros((1, 128), jnp.float32).at[0, 0].set(1e-3) \
+        .at[0, 1].set(0.1).at[0, 2].set(0.05)
+    p = jax.random.normal(key, (512, 128), jnp.float32)
+    g = p * 0.01
+    m = jnp.zeros_like(p)
+    v = jnp.zeros_like(p)
+    x = jax.random.normal(key, (256, 128), jnp.float32)
+    w = jax.random.normal(key, (128, 128), jnp.float32) * 0.1
+    fused = hfuse.generate(adam_s, dw_s, res2.best.sched, interpret=True)
+    outs = fused(sc, p, g, m, v, x, w)
+    want_p, want_m, want_v = ref.adamw(p, g, m, v, lr=1e-3, b1=0.9, b2=0.95,
+                                       eps=1e-8, wd=0.1, bc1=0.1, bc2=0.05)
+    err2 = max(float(np.max(np.abs(np.asarray(outs[0]) - np.asarray(want_p)))),
+               float(np.max(np.abs(np.asarray(outs[3])
+                                   - np.asarray(ref.matmul(x, w))))))
+    csv_row("adam_overlap", adam.name, dw.name,
+            f"{res2.best.sched.ra}:{res2.best.sched.rb}",
+            round((native_time(adam) + native_time(dw)) * 1e6, 1),
+            round(res2.best.est.t_hfused * 1e6, 1),
+            round(res2.best.est.speedup_pct(), 1), f"{err2:.1e}")
+
+    # 3) grouped MoE at DECODE capacity (DeepSeek-V2 decode_32k: ~5 tokens
+    #    per expert per chip): E tiny weight-streaming matmuls; separate
+    #    launches pay E x (launch + ramp); the grouped kernel streams all
+    #    expert weights in one pipeline.  (At train capacity the per-expert
+    #    matmul is large and launch amortization vanishes -> ~0%: recorded.)
+    from repro.core.cost_model import LAUNCH_S
+    for C, tag in ((8, "decode"), (512, "train")):
+        E, d, f = 160, 5120, 1536
+        gmm = moe_gmm_op(E=E, C=C, d=d, f=f, bc=min(128, C))
+        per_expert = moe_gmm_op(E=1, C=C, d=d, f=f, bc=min(128, C))
+        t_sep = E * native_time(per_expert)
+        t_grp = native_time(gmm)
+        csv_row(f"moe_gmm_{tag}_C{C}", f"{E} expert FFNs",
+                "one grouped kernel", "-",
+                round(t_sep * 1e6, 1), round(t_grp * 1e6, 1),
+                round(100 * (t_sep - t_grp) / t_sep, 1), "tested")
+
+
+if __name__ == "__main__":
+    run()

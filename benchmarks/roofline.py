@@ -1,0 +1,187 @@
+"""§Roofline aggregator: assemble the per-(arch × shape) roofline table from
+the dry-run artifacts.
+
+Per cell:
+  * full-depth SCANNED artifact       -> memory_analysis (exact buffers),
+                                         compile proof, collective kinds
+  * two PREFIX-DEPTH UNROLLED artifacts (_d<k> tags)
+        -> exact whole-program FLOPs / HLO-bytes / collective bytes at two
+           depths; linear per-pattern-unit extrapolation to full depth
+           (units are homogeneous by construction — launch/dryrun.scale_depth)
+
+Terms (TPU v5e): tc = flops/197e12, tm = bytes/819e9, tcoll = wire/50e9.
+HLO-bytes note: cost_analysis "bytes accessed" counts every HLO operand
+(pre-fusion upper bound on HBM traffic); we report it AND a streaming
+lower bound (params+activations+cache read/write) — the truth lies between,
+and the bound-type column uses the lower bound (documented in EXPERIMENTS).
+"""
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.configs import SHAPES, get_config, list_archs, shape_applicable
+from repro.distributed.hlo_analysis import HBM_BW, ICI_BW, PEAK_FLOPS
+from repro.models import lm
+
+ART = Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
+
+PATTERN_UNIT = {"recurrentgemma-2b": 3, "xlstm-1.3b": 8}
+
+
+def _load(name: str):
+    p = ART / f"{name}.json"
+    if not p.exists():
+        return None
+    return json.loads(p.read_text())
+
+
+def streaming_bytes_lower_bound(arch: str, shape) -> float:
+    """Per-chip HBM-traffic lower bound: params read (+opt state r/w for
+    train), KV-cache read(+write), activation stream (2 bytes/elem/layer
+    boundary)."""
+    cfg = get_config(arch)
+    n_chips = 256
+    n_params = lm.count_params(cfg, active_only=shape.kind != "train")
+    n_all = lm.count_params(cfg)
+    B, S, L, d = shape.global_batch, shape.seq_len, cfg.num_layers, cfg.d_model
+    if shape.kind == "train":
+        # fwd+bwd+remat reads params ~3x, optimizer r/w m,v fp32 + grads
+        per_chip = (3 * n_all * 2 + n_all * (4 + 4) * 2 + n_all * 4) / n_chips
+        per_chip += 4 * B * S * d * L * 2 / n_chips          # activations
+    elif shape.kind == "prefill":
+        per_chip = n_params * 2 / n_chips
+        per_chip += 4 * B * S * d * L * 2 / n_chips
+        per_chip += 2 * B * S * cfg.num_kv_heads * cfg.resolved_head_dim \
+            * L * 2 / n_chips                                # cache write
+    else:   # decode
+        per_chip = n_params * 2 / n_chips                    # weights stream
+        # cache read: per kind
+        kv = 0
+        for kind in cfg.pattern:
+            if kind == "attn":
+                kv += 2 * B * S * cfg.num_kv_heads * cfg.resolved_head_dim * 2
+            elif kind == "local":
+                kv += 2 * B * min(cfg.local_window, S) \
+                    * cfg.num_kv_heads * cfg.resolved_head_dim * 2
+            elif kind == "mla":
+                kv += B * S * (cfg.mla.kv_lora_rank
+                               + cfg.mla.qk_rope_head_dim) * 2
+            elif kind == "mlstm":
+                f = int(cfg.mlstm_proj_factor * cfg.d_model)
+                dk = (f // 2) // cfg.num_heads
+                kv += B * cfg.num_heads * dk * (f // cfg.num_heads) * 4 * 2
+            elif kind in ("rglru", "slstm"):
+                kv += B * (cfg.lru_width or d) * 4 * 2
+        per_chip += kv / n_chips
+    return per_chip
+
+
+def extrapolate(arch: str, shape_name: str) -> dict | None:
+    unit = PATTERN_UNIT.get(arch, 1)
+    d1, d2 = (unit, 2 * unit) if unit > 1 else (2, 4)
+    a1 = _load(f"{arch}__{shape_name}__single_d{d1}")
+    a2 = _load(f"{arch}__{shape_name}__single_d{d2}")
+    if not a1 or not a2 or a1["status"] != "OK" or a2["status"] != "OK":
+        return None
+    L = get_config(arch).num_layers
+    u1, u2, uL = d1 / unit, d2 / unit, L / unit
+
+    def ex(key):
+        x1 = a1["roofline"][key]
+        x2 = a2["roofline"][key]
+        per = (x2 - x1) / (u2 - u1)
+        return x1 + per * (uL - u1)
+
+    return {"flops": ex("flops_per_chip"), "hlo_bytes": ex("bytes_per_chip"),
+            "coll_bytes": ex("coll_bytes_per_chip"),
+            "depths": (d1, d2)}
+
+
+def build_table() -> list[dict]:
+    rows = []
+    for arch in list_archs():
+        cfg = get_config(arch)
+        for shape_name, shape in SHAPES.items():
+            ok, why = shape_applicable(cfg, shape)
+            scanned = _load(f"{arch}__{shape_name}__single")
+            row = {"arch": arch, "shape": shape_name}
+            if not ok:
+                row.update(status="SKIP", reason=why)
+                rows.append(row)
+                continue
+            if not scanned or scanned.get("status") != "OK":
+                row.update(status="MISSING")
+                rows.append(row)
+                continue
+            ext = extrapolate(arch, shape_name)
+            sc = scanned["roofline"]
+            flops = ext["flops"] if ext else sc["flops_per_chip"]
+            hlo_bytes = ext["hlo_bytes"] if ext else sc["bytes_per_chip"]
+            coll = ext["coll_bytes"] if ext else sc["coll_bytes_per_chip"]
+            lb = streaming_bytes_lower_bound(arch, shape)
+            mf = scanned["model_flops_per_chip"]
+            tc = flops / PEAK_FLOPS
+            tm_lb = lb / HBM_BW
+            tm_ub = hlo_bytes / HBM_BW
+            tcoll = coll / ICI_BW
+            terms = {"compute": tc, "memory": tm_lb, "collective": tcoll}
+            dom = max(terms, key=terms.get)
+            t_bound = max(terms.values())
+            row.update(
+                status="OK", exact=bool(ext),
+                flops_per_chip=flops, hlo_bytes_per_chip=hlo_bytes,
+                stream_bytes_per_chip=lb, coll_bytes_per_chip=coll,
+                t_compute_s=tc, t_memory_lb_s=tm_lb, t_memory_ub_s=tm_ub,
+                t_collective_s=tcoll, dominant=dom, t_bound_s=t_bound,
+                model_flops_per_chip=mf,
+                useful_flops_ratio=mf / max(flops, 1.0),
+                roofline_fraction=(tc / t_bound if t_bound else 0.0),
+                mem=scanned.get("memory", {}),
+            )
+            rows.append(row)
+    return rows
+
+
+def markdown(rows) -> str:
+    out = ["| arch | shape | tc (s) | tm_lb (s) | tm_ub (s) | tcoll (s) | "
+           "dominant | MFU-bound | 6ND/HLO | exact |",
+           "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r["status"] != "OK":
+            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | — | "
+                       f"{r['status']} |  |  |  |")
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute_s']:.3e} | "
+            f"{r['t_memory_lb_s']:.3e} | {r['t_memory_ub_s']:.3e} | "
+            f"{r['t_collective_s']:.3e} | {r['dominant']} | "
+            f"{100 * r['roofline_fraction']:.0f}% | "
+            f"{r['useful_flops_ratio']:.2f} | "
+            f"{'unrolled' if r['exact'] else 'scanned'} |")
+    return "\n".join(out)
+
+
+def run():
+    rows = build_table()
+    (ART.parent / "roofline_table.json").write_text(
+        json.dumps(rows, indent=1, default=float))
+    from benchmarks.common import csv_row
+    csv_row("arch", "shape", "t_compute_s", "t_memory_lb_s", "t_collective_s",
+            "dominant", "roofline_fraction_pct", "useful_flops_ratio")
+    for r in rows:
+        if r["status"] == "OK":
+            csv_row(r["arch"], r["shape"], f"{r['t_compute_s']:.3e}",
+                    f"{r['t_memory_lb_s']:.3e}", f"{r['t_collective_s']:.3e}",
+                    r["dominant"], round(100 * r["roofline_fraction"], 1),
+                    round(r["useful_flops_ratio"], 3))
+        else:
+            csv_row(r["arch"], r["shape"], "-", "-", "-", r["status"], "-", "-")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,56 @@
+"""Benchmark driver — one section per paper table/figure + the framework
+integration table + the roofline summary.
+
+  PYTHONPATH=src python -m benchmarks.run [--fast]
+
+Time columns are cost-model derived over exact FLOP/byte counts (TPU v5e
+targets; this host is CPU-only — see benchmarks/common.py §Methodology);
+every HFuse row's kernel is numerics-verified in interpret mode.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="skip interpret-mode numerics verification")
+    args = ap.parse_args()
+
+    from benchmarks import fig7_pairs, fig8_kernels, fig9_fused, fig_framework
+    from benchmarks import roofline
+
+    print("# === fig8: individual kernel metrics (paper Fig. 8) ===")
+    t0 = time.time()
+    fig8_kernels.run()
+    print(f"# fig8 done in {time.time() - t0:.1f}s\n")
+
+    print("# === fig7: 16 pairs x workload ratios (paper Fig. 7) ===")
+    t0 = time.time()
+    fig7_pairs.run(check_numerics=not args.fast)
+    print(f"# fig7 done in {time.time() - t0:.1f}s\n")
+
+    print("# === fig9: fused metrics ±VMEM cap (paper Fig. 9, RegCap) ===")
+    t0 = time.time()
+    fig9_fused.run()
+    print(f"# fig9 done in {time.time() - t0:.1f}s\n")
+
+    print("# === framework integration (beyond-paper; DESIGN.md §4) ===")
+    t0 = time.time()
+    fig_framework.run()
+    print(f"# framework done in {time.time() - t0:.1f}s\n")
+
+    print("# === roofline summary (from dry-run artifacts; §Roofline) ===")
+    t0 = time.time()
+    roofline.run()
+    print(f"# roofline done in {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

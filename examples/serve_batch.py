@@ -1,0 +1,55 @@
+"""Batched serving example: spin up the engine on a reduced RecurrentGemma
+(hybrid RG-LRU + local attention — O(1) decode state), serve a mixed batch
+of requests with greedy and temperature sampling, and verify the greedy
+stream against the step-by-step decode oracle.
+
+  PYTHONPATH=src python examples/serve_batch.py
+"""
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import lm
+from repro.serve.engine import Request, ServeEngine
+
+
+def main():
+    cfg = get_config("recurrentgemma-2b").reduced()
+    params = lm.init(cfg, jax.random.PRNGKey(0))
+    engine = ServeEngine(cfg, params, batch=4, max_len=96)
+
+    rng = np.random.default_rng(0)
+    reqs = [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab_size, 16).astype(np.int32),
+                    max_new_tokens=12,
+                    temperature=0.0 if i % 2 == 0 else 0.8)
+            for i in range(8)]
+    t0 = time.time()
+    engine.run(reqs)
+    dt = time.time() - t0
+    n_tok = sum(len(r.out_tokens) for r in reqs)
+    print(f"served {len(reqs)} requests / {n_tok} tokens in {dt:.2f}s")
+
+    # verify greedy request 0 against the oracle
+    r = reqs[0]
+    toks = jnp.asarray(np.stack([q.prompt for q in reqs[:4]]))
+    cache, logits = lm.prefill(cfg, params, {"tokens": toks}, max_len=96)
+    cur = jnp.argmax(logits, -1)
+    want = [int(cur[0])]
+    for _ in range(11):
+        logits, cache = lm.decode_step(cfg, params, cache, cur)
+        cur = jnp.argmax(logits, -1)
+        want.append(int(cur[0]))
+    assert r.out_tokens == want, (r.out_tokens, want)
+    print("greedy stream matches the decode oracle:", r.out_tokens)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Finalize: inject the generated roofline markdown table into EXPERIMENTS.md
+(replacing the <!-- ROOFLINE_TABLE --> marker) and print headline stats.
+
+  PYTHONPATH=src python scripts/scripts_finalize.py
+"""
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(ROOT / "src"))
+sys.path.insert(0, str(ROOT))
+
+import json
+
+from benchmarks import roofline
+
+rows = roofline.build_table()
+md = roofline.markdown(rows)
+(ROOT / "artifacts" / "roofline_table.json").write_text(json.dumps(rows, indent=1, default=float))
+
+exp = ROOT / "EXPERIMENTS.md"
+text = exp.read_text()
+marker = "<!-- ROOFLINE_TABLE -->"
+start = text.index(marker)
+# replace everything from the marker to EOF (or next header)
+text = text[: start + len(marker)] + "\n\n" + md + "\n"
+exp.write_text(text)
+
+ok = [r for r in rows if r["status"] == "OK"]
+dom = {}
+for r in ok:
+    dom[r["dominant"]] = dom.get(r["dominant"], 0) + 1
+print(f"cells OK: {len(ok)}; SKIP: {sum(r['status'] == 'SKIP' for r in rows)}; "
+      f"other: {sum(r['status'] not in ('OK', 'SKIP') for r in rows)}")
+print("dominant terms:", dom)
+exact = sum(1 for r in ok if r.get("exact"))
+print(f"exact (unrolled-extrapolated) cells: {exact}/{len(ok)}")
+best = sorted(ok, key=lambda r: -r["roofline_fraction"])[:5]
+for r in best:
+    print(f"  best MFU-bound: {r['arch']} {r['shape']} "
+          f"{100 * r['roofline_fraction']:.0f}%")

@@ -1,0 +1,5 @@
+from repro.configs.base import (  # noqa: F401
+    ATTN, LOCAL_ATTN, MLA, MLSTM, RGLRU, SLSTM, SHAPES,
+    MLAConfig, MoEConfig, ModelConfig, ShapeConfig,
+    get_config, list_archs, register, shape_applicable,
+)

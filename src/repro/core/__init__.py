@@ -1,0 +1,9 @@
+"""The paper's contribution: automatic horizontal fusion for TPU/Pallas.
+
+op_spec    — fusible-op IR (1-D grid + BlockSpecs + resource profile)
+cost_model — 3-term roofline scoring (the napkin-math engine)
+hfuse      — Generate(): the fused pallas_call builder (+ vfuse baseline)
+autotuner  — Main(): schedule x variant x VMEM-cap search (Fig. 6)
+planner    — graph-level pairing of memory-bound x compute-bound ops
+"""
+from repro.core import autotuner, cost_model, hfuse, op_spec, planner  # noqa: F401

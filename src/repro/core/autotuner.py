@@ -1,0 +1,95 @@
+"""The paper's Main() search (Fig. 6), adapted:
+
+  paper                                  here
+  -------------------------------------  -----------------------------------
+  d1 <- 128, 256, ... (thread partition) Schedule(ra, rb) interleave ratios
+  profile F without register bound       cost under full VMEM budget
+  compute r0, profile F with bound r0    cost under the computed VMEM cap
+                                         (shrunk block variants if provided)
+  keep the fastest (F*, r*)              keep (schedule*, variant*, cap*)
+
+Scoring: the three-term roofline cost model by default; on real TPU hardware
+pass ``measure=`` (a wall-clock callable) and the loop becomes the paper's
+measurement-driven profiling verbatim.  Every candidate is recorded in the
+search log (EXPERIMENTS.md shows these for the fig7 pairs).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Callable, Optional, Sequence
+
+from repro.core import hfuse
+from repro.core.cost_model import (VMEM_BUDGET, FusedEstimate, Schedule,
+                                   hfused_cost, ratio_candidates)
+from repro.core.op_spec import OpSpec
+
+
+@dataclass
+class Candidate:
+    sched: Schedule
+    variant: int                  # index into the (opA, opB) variant list
+    vmem_cap: Optional[int]
+    est: FusedEstimate
+    measured_s: Optional[float] = None
+
+    @property
+    def score(self) -> float:
+        return self.measured_s if self.measured_s is not None else self.est.t_hfused
+
+
+@dataclass
+class SearchResult:
+    best: Candidate
+    log: list[Candidate]
+    a: OpSpec
+    b: OpSpec
+
+    def build(self, *, interpret: bool = False):
+        a, b = self.a, self.b
+        return hfuse.generate(a, b, self.best.sched, interpret=interpret,
+                              vmem_limit=self.best.vmem_cap)
+
+    def table(self) -> list[dict]:
+        return [{
+            "ra": c.sched.ra, "rb": c.sched.rb, "variant": c.variant,
+            "vmem_cap": c.vmem_cap, "t_hfused_us": c.est.t_hfused * 1e6,
+            "speedup_pct": c.est.speedup_pct(), "vmem_ok": c.est.vmem_ok,
+            "measured_s": c.measured_s,
+        } for c in self.log]
+
+
+def search(variants: Sequence[tuple[OpSpec, OpSpec]] | tuple[OpSpec, OpSpec],
+           *, vmem_budget: int = VMEM_BUDGET,
+           measure: Optional[Callable] = None) -> SearchResult:
+    """Search schedules × op variants × VMEM caps.
+
+    ``variants``: one (opA, opB) pair or a list of pairs (e.g. alternative
+    block shapes — the register-cap analogue shrinks blocks to restore
+    pipelining headroom).
+    """
+    if isinstance(variants, tuple) and isinstance(variants[0], OpSpec):
+        variants = [variants]
+    log: list[Candidate] = []
+    best: Optional[Candidate] = None
+    for vi, (a, b) in enumerate(variants):
+        for sched in ratio_candidates(a, b):
+            # "no register bound": full budget
+            caps = [None]
+            # "with bound r0": the budget both ops would need to co-reside
+            # with full double buffering (paper Fig. 6 line 13-16 analogue)
+            need = 2 * (a.vmem_bytes + b.vmem_bytes)
+            if need > vmem_budget:
+                caps.append(vmem_budget)
+            for cap in caps:
+                est = hfused_cost(a, b, sched,
+                                  vmem_budget=cap or vmem_budget)
+                cand = Candidate(sched, vi, cap, est)
+                if measure is not None:
+                    fused = hfuse.generate(a, b, sched, vmem_limit=cap)
+                    cand.measured_s = measure(fused, a, b)
+                log.append(cand)
+                if best is None or cand.score < best.score:
+                    best = cand
+                    best_pair = (a, b)
+    return SearchResult(best=best, log=log, a=best_pair[0], b=best_pair[1])

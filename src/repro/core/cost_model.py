@@ -1,0 +1,145 @@
+"""Three-term roofline cost model for fusion decisions (TPU v5e).
+
+This is the napkin-math engine behind the planner and the autotuner — the
+role profiling plays in the paper's ``Main()`` (Fig. 6).  The fundamental
+inequality of horizontal fusion:
+
+    t_native(A;B) = max(tcA, tmA) + max(tcB, tmB)      (two kernels, serial)
+    t_hfused(A∪B) ≈ max(tcA + tcB, tmA + tmB)          (engines overlap)
+
+    gain = t_native − t_hfused ≥ 0, strictly > 0  iff  the bound kinds
+    differ (one memory-, one compute-bound) — the paper's §IV-C finding
+    (Ethash+Blake256 wins, Blake256+SHA256 loses) falls out directly.
+
+VMEM pressure is the occupancy analogue: the fused kernel needs both ops'
+blocks resident (×2 for double buffering).  Exceeding the budget forfeits
+pipelining — modeled as degrading overlap from max(c,m) toward c+m — the
+same cliff the paper's register-cap search navigates.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+
+from repro.core.op_spec import OpSpec
+from repro.distributed.hlo_analysis import HBM_BW, PEAK_FLOPS, VMEM_BYTES
+
+VMEM_BUDGET = int(VMEM_BYTES * 0.8)        # leave headroom for spills/semaphores
+
+# Sub-roofline terms (TPU v5e).  The paper's GPU gains come partly from
+# effects *below* the roofline (issue-slot stalls); the TPU analogues we
+# model are (a) kernel launch/teardown (~2us — paper footnote 1: fusion
+# halves it) and (b) the pipeline ramp: the first block's DMA and the last
+# block's compute have nothing to overlap with (one (tc+tm)/N per kernel;
+# the fused kernel pays it once).  Same-resource pairs gain only these
+# small terms on TPU (and can lose via VMEM pressure) — the honest
+# adaptation finding, recorded in EXPERIMENTS.md §Paper-validation.
+LAUNCH_S = 2e-6
+
+
+def native_time(op: OpSpec) -> float:
+    """Standalone kernel wall-time model: roofline + ramp + launch."""
+    ramp = (op.t_compute + op.t_memory) / max(op.grid, 1)
+    return max(op.t_compute, op.t_memory) + ramp + LAUNCH_S
+
+
+@dataclass(frozen=True)
+class Schedule:
+    """Interleave ratio: ra A-steps then rb B-steps, repeating.
+
+    (ra, rb) generalizes the paper's thread-partition point d1: it sets how
+    much of each op is in flight per super-step.  DMA-elision index maps
+    (core/hfuse.py) hold each op's blocks during the other's phase.
+    """
+    ra: int
+    rb: int
+
+    @property
+    def period(self) -> int:
+        return self.ra + self.rb
+
+
+@dataclass
+class FusedEstimate:
+    t_native: float
+    t_vfused: float
+    t_hfused: float
+    gain_vs_native: float
+    gain_vs_vfused: float
+    vmem_bytes: int
+    vmem_ok: bool
+    overlap_eff: float
+
+    def speedup_pct(self) -> float:
+        return 100.0 * self.gain_vs_native / max(self.t_native, 1e-30)
+
+
+def hfused_cost(a: OpSpec, b: OpSpec, sched: Schedule,
+                vmem_budget: int = VMEM_BUDGET) -> FusedEstimate:
+    """Cost of the interleaved fused kernel under a schedule."""
+    tcA, tmA = a.t_compute, a.t_memory
+    tcB, tmB = b.t_compute, b.t_memory
+    rampA = (tcA + tmA) / max(a.grid, 1)
+    rampB = (tcB + tmB) / max(b.grid, 1)
+    t_native = native_time(a) + native_time(b)          # two launches
+    # vertical/concatenated baseline: one kernel, phases stay serial;
+    # saves one launch + the boundary ramp (paper footnote 1)
+    t_vfused = max(tcA, tmA) + max(tcB, tmB) \
+        + max(rampA, rampB) + LAUNCH_S
+
+    # The interleave ratio controls how long the two ops co-execute: with
+    # grids Na, Nb and ratio ra:rb, co-execution lasts until the shorter
+    # op (in super-steps) is exhausted; the tail runs un-overlapped.
+    import math
+    ssA = math.ceil(a.grid / sched.ra)
+    ssB = math.ceil(b.grid / sched.rb)
+    co = min(ssA, ssB)                      # super-steps with both active
+    fA = co / ssA
+    fB = co / ssB
+    # overlapped portion: engines add; tail: leftover of the longer op
+    t_overlap = max(fA * tcA + fB * tcB, fA * tmA + fB * tmB)
+    t_tail = max((1 - fA) * tcA, (1 - fA) * tmA) + \
+        max((1 - fB) * tcB, (1 - fB) * tmB)
+
+    # VMEM: both ops' blocks resident, double-buffered
+    vmem = 2 * (a.vmem_bytes + b.vmem_bytes)
+    vmem_ok = vmem <= vmem_budget
+    ramp_fused = max(rampA, rampB)
+    if vmem_ok:
+        t_h = t_overlap + t_tail + ramp_fused + LAUNCH_S
+        eff = 1.0
+    else:
+        # pipelining forfeited: DMA and compute serialize (the "occupancy
+        # cliff'); interpolate by how far over budget we are
+        over = min(2.0, vmem / vmem_budget)
+        serial = (fA * tcA + fB * tcB) + (fA * tmA + fB * tmB)
+        t_h = t_tail + t_overlap + (serial - t_overlap) * (over - 1.0) \
+            + ramp_fused + LAUNCH_S
+        eff = max(0.0, 2.0 - over)
+    return FusedEstimate(
+        t_native=t_native, t_vfused=t_vfused, t_hfused=t_h,
+        gain_vs_native=t_native - t_h, gain_vs_vfused=t_vfused - t_h,
+        vmem_bytes=vmem, vmem_ok=vmem_ok, overlap_eff=eff)
+
+
+def fusion_profitable(a: OpSpec, b: OpSpec) -> bool:
+    """The paper's scenario test: different bound kinds => profitable."""
+    return a.bound != b.bound
+
+
+def ratio_candidates(a: OpSpec, b: OpSpec,
+                     max_ratio: int = 4096) -> list[Schedule]:
+    """Candidate interleave ratios ~ the paper's d1 sweep in steps of 128.
+
+    Includes the exact grid-proportional ratio (so wildly imbalanced grids —
+    e.g. a 2048-step decode-attention stream vs a 4-step prefill matmul —
+    co-execute end-to-end) plus neighbours and small fixed ratios."""
+    import math
+    cands = {(1, 1), (2, 1), (1, 2), (4, 1), (1, 4)}
+    g = a.grid / max(b.grid, 1)
+    for r in (g / 2, g, g * 2):
+        if r >= 1:
+            cands.add((min(max_ratio, max(1, round(r))), 1))
+        else:
+            cands.add((1, min(max_ratio, max(1, round(1 / max(r, 1e-9))))))
+    return [Schedule(ra, rb) for ra, rb in sorted(cands)]

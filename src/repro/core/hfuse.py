@@ -1,0 +1,181 @@
+"""Generate() — build the horizontally-fused Pallas kernel from two OpSpecs.
+
+This is the TPU realization of the paper's Fig. 5 algorithm:
+
+  paper (CUDA thread space)             here (Pallas grid space)
+  -------------------------------------------------------------------------
+  threads [0,d1) run K1, [d1,d0) K2     grid steps interleave A/B per the
+                                        Schedule (ra A-steps : rb B-steps)
+  branch on threadIdx.x                 @pl.when(phase(program_id))
+  replace threadIdx/blockDim with       op-local step s_A(t), s_B(t) passed
+  tid_1/size_1, tid_2/size_2            to each body
+  bar.sync id, d partial barriers       not needed: grid steps independent
+                                        (see DESIGN.md §2)
+  register cap (maxrregcount)           VMEM cap via block-shape choice +
+                                        compiler vmem limit
+
+DMA-elision scheduling: during B's phase, every A operand's index map *holds*
+its last value (Pallas skips the copy when the block index is unchanged
+between steps), and vice versa.  Thus while a compute-bound B step occupies
+the MXU, the pipeline prefetches A's next (memory-bound) blocks — the warp-
+scheduler latency hiding of the paper, reconstructed with the only
+latency-hiding machinery a TPU has.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.cost_model import Schedule
+from repro.core.op_spec import OpSpec
+
+
+def _phase_fns(a: OpSpec, b: OpSpec, sched: Schedule):
+    ra, rb, period = sched.ra, sched.rb, sched.period
+
+    def a_step(t):
+        s, ph = t // period, t % period
+        idx = s * ra + jnp.minimum(ph, ra - 1)
+        return jnp.clip(idx, 0, a.grid - 1)
+
+    def a_active(t):
+        s, ph = t // period, t % period
+        return (ph < ra) & (s * ra + ph < a.grid)
+
+    def b_step(t):
+        s, ph = t // period, t % period
+        idx = jnp.where(ph >= ra, s * rb + (ph - ra), s * rb - 1)
+        return jnp.clip(idx, 0, b.grid - 1)
+
+    def b_active(t):
+        s, ph = t // period, t % period
+        return (ph >= ra) & (s * rb + (ph - ra) < b.grid)
+
+    n_super = max(math.ceil(a.grid / ra), math.ceil(b.grid / rb))
+    return a_step, a_active, b_step, b_active, n_super * period
+
+
+def generate(a: OpSpec, b: OpSpec, sched: Schedule, *,
+             interpret: bool = False, vmem_limit: Optional[int] = None):
+    """Returns fused(*a_inputs, *b_inputs) -> (*a_outputs, *b_outputs)."""
+    a_step, a_active, b_step, b_active, n_steps = _phase_fns(a, b, sched)
+
+    nia, noa = len(a.inputs), len(a.outputs)
+    nib, nob = len(b.inputs), len(b.outputs)
+
+    def fused_kernel(*refs):
+        t = pl.program_id(0)
+        a_in = refs[:nia]
+        b_in = refs[nia: nia + nib]
+        a_out = refs[nia + nib: nia + nib + noa]
+        b_out = refs[nia + nib + noa:]
+
+        @pl.when(a_active(t))
+        def _():
+            a.body(a_step(t), *a_in, *a_out)
+
+        @pl.when(b_active(t))
+        def _():
+            b.body(b_step(t), *b_in, *b_out)
+
+    def remap(op_step, operand):
+        return pl.BlockSpec(operand.block_shape,
+                            lambda t, _f=operand.index_map, _s=op_step: _f(_s(t)))
+
+    in_specs = ([remap(a_step, o) for o in a.inputs]
+                + [remap(b_step, o) for o in b.inputs])
+    out_specs = ([remap(a_step, o) for o in a.outputs]
+                 + [remap(b_step, o) for o in b.outputs])
+    out_shape = ([jax.ShapeDtypeStruct(o.shape, o.dtype) for o in a.outputs]
+                 + [jax.ShapeDtypeStruct(o.shape, o.dtype) for o in b.outputs])
+
+    kwargs = {}
+    if vmem_limit and not interpret and jax.default_backend() == "tpu":
+        try:
+            from jax.experimental.pallas import tpu as pltpu
+            kwargs["compiler_params"] = pltpu.CompilerParams(
+                vmem_limit_bytes=int(vmem_limit))
+        except Exception:
+            pass
+
+    call = pl.pallas_call(
+        fused_kernel,
+        grid=(n_steps,),
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        interpret=interpret,
+        **kwargs,
+    )
+
+    def fused(*operands):
+        assert len(operands) == nia + nib, (len(operands), nia, nib)
+        outs = call(*operands)
+        return tuple(outs) if isinstance(outs, (list, tuple)) else (outs,)
+
+    fused.n_steps = n_steps
+    fused.schedule = sched
+    return fused
+
+
+def generate_vfused(a: OpSpec, b: OpSpec, **kw):
+    """Concatenated (vertical-style) baseline: all A steps, then all B steps —
+    one kernel, no interleaving.  Same machinery, degenerate schedule."""
+    return generate(a, b, Schedule(a.grid, b.grid), **kw)
+
+
+def run_single(op: OpSpec, *, interpret: bool = False):
+    """Standalone pallas_call for one OpSpec (used by tests and `native`)."""
+    def kernel(*refs):
+        t = pl.program_id(0)
+        op.body(t, *refs)
+
+    call = pl.pallas_call(
+        kernel,
+        grid=(op.grid,),
+        in_specs=[pl.BlockSpec(o.block_shape, o.index_map) for o in op.inputs],
+        out_specs=[pl.BlockSpec(o.block_shape, o.index_map) for o in op.outputs],
+        out_shape=[jax.ShapeDtypeStruct(o.shape, o.dtype) for o in op.outputs],
+        interpret=interpret,
+    )
+
+    def run(*operands):
+        outs = call(*operands)
+        return tuple(outs) if isinstance(outs, (list, tuple)) else (outs,)
+    return run
+
+
+def run_native(a: OpSpec, b: OpSpec, *, interpret: bool = False):
+    """The 'native' baseline: two separate pallas_calls (two launches).
+
+    NOTE: on a TPU core there is no stream concurrency — two kernels
+    serialize — which is why horizontal fusion is the *only* way two ops
+    co-execute (DESIGN.md §8.5)."""
+    def one(op):
+        def kernel(*refs):
+            t = pl.program_id(0)
+            op.body(t, *refs)
+        return pl.pallas_call(
+            kernel,
+            grid=(op.grid,),
+            in_specs=[pl.BlockSpec(o.block_shape, o.index_map) for o in op.inputs],
+            out_specs=[pl.BlockSpec(o.block_shape, o.index_map) for o in op.outputs],
+            out_shape=[jax.ShapeDtypeStruct(o.shape, o.dtype) for o in op.outputs],
+            interpret=interpret,
+        )
+
+    ca, cb = one(a), one(b)
+
+    def native(*operands):
+        outs_a = ca(*operands[:len(a.inputs)])
+        outs_b = cb(*operands[len(a.inputs):])
+        outs_a = outs_a if isinstance(outs_a, (list, tuple)) else [outs_a]
+        outs_b = outs_b if isinstance(outs_b, (list, tuple)) else [outs_b]
+        return (*outs_a, *outs_b)
+
+    return native

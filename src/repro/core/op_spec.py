@@ -1,0 +1,97 @@
+"""OpSpec — the fusible-kernel IR of the horizontal-fusion engine.
+
+An OpSpec is the TPU analogue of the paper's "input kernel": a computation
+with a linear (1-D) grid of independent steps, per-operand BlockSpecs, and a
+resource profile (FLOPs / HBM bytes / VMEM working set).  The paper's kernels
+are CUDA source; ours are Pallas bodies.  The 1-D grid plays the role of the
+block space; the *fused* kernel's grid (core/hfuse.py) partitions / interleaves
+its steps between two ops the way HFUSE partitions the thread space.
+
+Contract for ``body``:
+  body(step, *in_refs, *out_refs) — ``step`` is the op-local grid step
+  (a traced scalar); refs are VMEM blocks selected by the index maps.
+  The body must not call pl.program_id itself (the fused kernel owns it).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.hlo_analysis import HBM_BW, PEAK_FLOPS, RIDGE, VMEM_BYTES
+
+
+@dataclass(frozen=True)
+class Operand:
+    """One input or output of a fusible op."""
+    shape: tuple[int, ...]
+    dtype: Any
+    block_shape: tuple[int, ...]
+    index_map: Callable[[Any], tuple]      # op-local step -> block indices
+
+    def block_bytes(self) -> int:
+        return int(math.prod(self.block_shape)) * jnp.dtype(self.dtype).itemsize
+
+
+@dataclass
+class OpSpec:
+    name: str
+    grid: int                              # number of op-local steps
+    body: Callable                         # body(step, *in_refs, *out_refs)
+    inputs: tuple[Operand, ...]
+    outputs: tuple[Operand, ...]
+    flops: float                           # whole-op FLOPs
+    hbm_bytes: float                       # whole-op HBM traffic (streaming)
+    tag: str = ""                          # provenance (paper-suite name etc.)
+
+    # ------------------------------------------------------------------
+    @property
+    def vmem_bytes(self) -> int:
+        """Per-step working set (single-buffered)."""
+        return sum(o.block_bytes() for o in (*self.inputs, *self.outputs))
+
+    @property
+    def arithmetic_intensity(self) -> float:
+        return self.flops / max(self.hbm_bytes, 1.0)
+
+    @property
+    def bound(self) -> str:
+        """Roofline classification — the paper's 'kind of GPU resource'."""
+        return "compute" if self.arithmetic_intensity >= RIDGE else "memory"
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def t_native(self) -> float:
+        """Ideal pipelined standalone time: max of the two engine terms."""
+        return max(self.t_compute, self.t_memory)
+
+    def step_costs(self) -> tuple[float, float]:
+        """(compute, memory) seconds per grid step (uniform-step assumption)."""
+        return self.t_compute / self.grid, self.t_memory / self.grid
+
+    def describe(self) -> dict:
+        return {
+            "name": self.name, "grid": self.grid, "flops": self.flops,
+            "hbm_bytes": self.hbm_bytes, "vmem_bytes": self.vmem_bytes,
+            "arithmetic_intensity": round(self.arithmetic_intensity, 2),
+            "bound": self.bound,
+            "t_compute_us": self.t_compute * 1e6,
+            "t_memory_us": self.t_memory * 1e6,
+            "t_native_us": self.t_native * 1e6,
+        }
+
+
+def make_operand(arr_or_sds, block_shape, index_map) -> Operand:
+    return Operand(tuple(arr_or_sds.shape), arr_or_sds.dtype,
+                   tuple(block_shape), index_map)

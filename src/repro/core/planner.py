@@ -1,0 +1,117 @@
+"""Graph-level fusion planner — decides WHICH independent ops to fuse.
+
+The paper fuses kernels that happen to be co-resident (different CUDA
+streams, e.g. Batchnorm during training + Hist from a monitoring pass).  In
+a framework we know the whole op graph, so the planner:
+
+  1. classifies every op by roofline bound (compute vs memory),
+  2. builds the dependency closure (never fuse ops on a dependent path),
+  3. greedily pairs memory-bound with compute-bound ops whose native times
+     are closest (the paper's Fig. 7: gains peak at execution-time ratio ~1),
+  4. runs the autotuner on each pair and keeps pairs with predicted gain
+     above a threshold — the paper's negative results (Blake256+SHA256
+     loses) become planner rejections.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Sequence
+
+from repro.core import autotuner
+from repro.core.cost_model import fusion_profitable
+from repro.core.op_spec import OpSpec
+
+
+@dataclass
+class GraphOp:
+    op: OpSpec
+    deps: frozenset[str] = frozenset()       # names of ops this one reads from
+
+
+@dataclass
+class FusionDecision:
+    a: str
+    b: str
+    result: autotuner.SearchResult
+    predicted_speedup_pct: float
+
+
+@dataclass
+class FusionPlan:
+    fused: list[FusionDecision]
+    singles: list[str]
+    rejected: list[tuple[str, str, str]]     # (a, b, reason)
+
+    def summary(self) -> list[dict]:
+        rows = [{
+            "pair": f"{d.a}+{d.b}",
+            "schedule": f"{d.result.best.sched.ra}:{d.result.best.sched.rb}",
+            "vmem_cap": d.result.best.vmem_cap,
+            "predicted_speedup_pct": round(d.predicted_speedup_pct, 1),
+        } for d in self.fused]
+        rows += [{"pair": s, "schedule": "-", "predicted_speedup_pct": 0.0}
+                 for s in self.singles]
+        return rows
+
+
+def _reachable(ops: dict[str, GraphOp]) -> dict[str, frozenset]:
+    """Transitive dependency closure."""
+    memo: dict[str, frozenset] = {}
+
+    def visit(n: str) -> frozenset:
+        if n in memo:
+            return memo[n]
+        acc = set(ops[n].deps)
+        for d in ops[n].deps:
+            if d in ops:
+                acc |= visit(d)
+        memo[n] = frozenset(acc)
+        return memo[n]
+
+    for n in ops:
+        visit(n)
+    return memo
+
+
+def independent(ops: dict[str, GraphOp], a: str, b: str) -> bool:
+    clo = _reachable(ops)
+    return b not in clo[a] and a not in clo[b]
+
+
+def plan(graph: Sequence[GraphOp], *, min_gain_pct: float = 2.0,
+         allow_same_bound: bool = False) -> FusionPlan:
+    ops = {g.op.name: g for g in graph}
+    mem = sorted((g.op for g in graph if g.op.bound == "memory"),
+                 key=lambda o: -o.t_native)
+    comp = sorted((g.op for g in graph if g.op.bound == "compute"),
+                  key=lambda o: -o.t_native)
+
+    used: set[str] = set()
+    fused: list[FusionDecision] = []
+    rejected: list[tuple[str, str, str]] = []
+
+    for m in mem:
+        if m.name in used:
+            continue
+        # closest-native-time compute partner (paper: ratio ~1 is best)
+        partners = [c for c in comp if c.name not in used
+                    and independent(ops, m.name, c.name)]
+        if not partners and allow_same_bound:
+            partners = [c.op for c in graph
+                        if c.op.name not in used and c.op.name != m.name
+                        and independent(ops, m.name, c.op.name)]
+        if not partners:
+            continue
+        c = min(partners, key=lambda o: abs(o.t_native - m.t_native))
+        res = autotuner.search((m, c))
+        gain = res.best.est.speedup_pct()
+        if gain >= min_gain_pct:
+            fused.append(FusionDecision(m.name, c.name, res, gain))
+            used |= {m.name, c.name}
+        else:
+            rejected.append((m.name, c.name,
+                             f"predicted gain {gain:.1f}% < {min_gain_pct}%"))
+
+    singles = [g.op.name for g in graph if g.op.name not in used]
+    return FusionPlan(fused=fused, singles=singles, rejected=rejected)

@@ -1,0 +1,2 @@
+from repro.kernels import (adam, decode_attention, flash_attention, matmul,
+                           moe_gmm, ops, paper_suite, ref, rmsnorm)  # noqa: F401

@@ -1,0 +1,119 @@
+"""Horizontally-fused AdamW Pallas kernel.
+
+The optimizer step is N independent, tiny, memory-bound per-tensor updates —
+exactly the paper's footnote-1 scenario (launch overhead) *plus* its main
+scenario (pure memory-bound work that should overlap compute).  All tensors
+are flattened into one (rows, 128) buffer and updated by a single kernel:
+one launch, one long DMA stream.  The fusible OpSpec form pairs with
+backward-pass matmuls in the planner (DESIGN.md §4.5).
+
+Scalars (lr, bias corrections) ride in a tiny fp32 operand with a constant
+index map (fetched once).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.op_spec import OpSpec, Operand
+
+LANES = 128
+
+
+def _adam_kernel(sc_ref, p_ref, g_ref, m_ref, v_ref,
+                 po_ref, mo_ref, vo_ref, *, b1, b2, eps, wd):
+    lr = sc_ref[0, 0]
+    bc1 = sc_ref[0, 1]
+    bc2 = sc_ref[0, 2]
+    p = p_ref[...].astype(jnp.float32)
+    g = g_ref[...].astype(jnp.float32)
+    m = b1 * m_ref[...] + (1 - b1) * g
+    v = b2 * v_ref[...] + (1 - b2) * g * g
+    step = (m / bc1) / (jnp.sqrt(v / bc2) + eps) + wd * p
+    po_ref[...] = (p - lr * step).astype(po_ref.dtype)
+    mo_ref[...] = m
+    vo_ref[...] = v
+
+
+def adamw_flat(p, g, m, v, scalars, *, b1=0.9, b2=0.95, eps=1e-8, wd=0.1,
+               bm: int = 1024, interpret: bool = False):
+    """p,g: (R, 128) param dtype; m,v: (R, 128) fp32; scalars: (1, 128) fp32
+    holding [lr, bc1, bc2, ...].  Returns (new_p, new_m, new_v)."""
+    R, C = p.shape
+    assert C == LANES
+    bm = min(bm, R)
+    assert R % bm == 0
+    kern = functools.partial(_adam_kernel, b1=b1, b2=b2, eps=eps, wd=wd)
+    blk = lambda s: (s, 0)
+    return pl.pallas_call(
+        kern,
+        grid=(R // bm,),
+        in_specs=[pl.BlockSpec((1, LANES), lambda s: (0, 0)),
+                  pl.BlockSpec((bm, C), blk), pl.BlockSpec((bm, C), blk),
+                  pl.BlockSpec((bm, C), blk), pl.BlockSpec((bm, C), blk)],
+        out_specs=[pl.BlockSpec((bm, C), blk), pl.BlockSpec((bm, C), blk),
+                   pl.BlockSpec((bm, C), blk)],
+        out_shape=[jax.ShapeDtypeStruct((R, C), p.dtype),
+                   jax.ShapeDtypeStruct((R, C), jnp.float32),
+                   jax.ShapeDtypeStruct((R, C), jnp.float32)],
+        interpret=interpret,
+    )(scalars, p, g, m, v)
+
+
+def adamw_op(R: int, dtype=jnp.bfloat16, bm: int = 1024,
+             b1=0.9, b2=0.95, eps=1e-8, wd=0.1) -> OpSpec:
+    """Fusible form of the flat update (grid over row blocks)."""
+    assert R % bm == 0
+    blk = lambda s: (s, 0)
+    const = lambda s: (0, 0)
+
+    def body(step, sc_ref, p_ref, g_ref, m_ref, v_ref, po, mo, vo):
+        _adam_kernel(sc_ref, p_ref, g_ref, m_ref, v_ref, po, mo, vo,
+                     b1=b1, b2=b2, eps=eps, wd=wd)
+
+    itemsize = jnp.dtype(dtype).itemsize
+    C = LANES
+    return OpSpec(
+        name=f"adamw_{R}x{C}", grid=R // bm, body=body,
+        inputs=(Operand((1, C), jnp.float32, (1, C), const),
+                Operand((R, C), dtype, (bm, C), blk),
+                Operand((R, C), dtype, (bm, C), blk),
+                Operand((R, C), jnp.float32, (bm, C), blk),
+                Operand((R, C), jnp.float32, (bm, C), blk)),
+        outputs=(Operand((R, C), dtype, (bm, C), blk),
+                 Operand((R, C), jnp.float32, (bm, C), blk),
+                 Operand((R, C), jnp.float32, (bm, C), blk)),
+        flops=12.0 * R * C,
+        hbm_bytes=R * C * (2 * itemsize + 3 * 4 + itemsize + 2 * 4),
+        tag="framework:adamw")
+
+
+# ---------------------------------------------------------------------------
+# pytree plumbing for the optimizer integration
+# ---------------------------------------------------------------------------
+def flatten_for_adam(tree):
+    """Concatenate all leaves into one (R, 128) buffer (zero-padded)."""
+    leaves = jax.tree.leaves(tree)
+    flat = jnp.concatenate([l.reshape(-1).astype(leaves[0].dtype)
+                            for l in leaves])
+    n = flat.shape[0]
+    R = math.ceil(n / LANES)
+    pad = R * LANES - n
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
+    return flat.reshape(R, LANES), n
+
+
+def unflatten_from_adam(flat2d, n, tree):
+    flat = flat2d.reshape(-1)[:n]
+    leaves, treedef = jax.tree.flatten(tree)
+    out, off = [], 0
+    for l in leaves:
+        k = math.prod(l.shape) if l.shape else 1
+        out.append(flat[off:off + k].reshape(l.shape).astype(l.dtype))
+        off += k
+    return jax.tree.unflatten(treedef, out)

@@ -1,0 +1,84 @@
+"""Decode attention Pallas kernel: one new token vs a long KV cache.
+
+Memory-bound par excellence (streams the whole cache, does O(D) flops per
+byte) — the framework's Ethash: the canonical horizontal-fusion partner for
+compute-bound matmuls in the dual-stream decode mode (serve/dual_stream.py).
+
+Fusible form: 1-D grid over (batch, kv-chunk) linearized; the online-softmax
+(m, l) carries live in small fp32 *outputs* with constant index maps (not
+scratch) so the op composes under core/hfuse.generate.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.op_spec import OpSpec, Operand
+
+NEG_INF = -1e30
+
+
+def decode_attention_op(B: int, S: int, H: int, Hkv: int, D: int,
+                        dtype=jnp.bfloat16, ck: int = 1024,
+                        length=None) -> OpSpec:
+    """q: (B,H,D); cache k,v: (B,S,Hkv,D); out o: (B,H,D) fp32.
+
+    Grid: B * (S // ck) steps, batch-major.  `length` (static) masks the
+    valid cache prefix; None = full cache.
+    """
+    assert S % ck == 0 and H % Hkv == 0
+    nk = S // ck
+    rep = H // Hkv
+    scale = 1.0 / math.sqrt(D)
+    valid_len = S if length is None else int(length)
+
+    def body(step, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref):
+        j = step % nk
+
+        @pl.when(j == 0)
+        def _():
+            m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+            l_ref[...] = jnp.zeros_like(l_ref)
+            o_ref[...] = jnp.zeros_like(o_ref)
+
+        q = q_ref[0].astype(jnp.float32) * scale          # (H, D)
+        k = k_ref[0].astype(jnp.float32)                  # (ck, Hkv, D)
+        v = v_ref[0].astype(jnp.float32)
+        qg = q.reshape(Hkv, rep, D)
+        s = jnp.einsum("hrd,khd->hrk", qg, k)             # (Hkv, rep, ck)
+        kpos = j * ck + jax.lax.broadcasted_iota(jnp.int32, (Hkv, rep, ck), 2)
+        s = jnp.where(kpos < valid_len, s, NEG_INF)
+        m_prev = m_ref[0]                                 # (H, 1)
+        m_new = jnp.maximum(m_prev, s.reshape(H, ck).max(-1, keepdims=True))
+        p = jnp.exp(s.reshape(H, ck) - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[0] = l_ref[0] * alpha + p.sum(-1, keepdims=True)
+        pv = jnp.einsum("hrk,khd->hrd", p.reshape(Hkv, rep, ck), v)
+        o_ref[0] = o_ref[0] * alpha + pv.reshape(H, D)
+        m_ref[0] = m_new
+
+        @pl.when(j == nk - 1)
+        def _():
+            o_ref[0] = o_ref[0] / jnp.maximum(l_ref[0], 1e-30)
+
+    itemsize = jnp.dtype(dtype).itemsize
+    return OpSpec(
+        name=f"decode_attn_B{B}_S{S}_H{H}kv{Hkv}", grid=B * nk, body=body,
+        inputs=(Operand((B, H, D), dtype, (1, H, D), lambda s: (s // nk, 0, 0)),
+                Operand((B, S, Hkv, D), dtype, (1, ck, Hkv, D),
+                        lambda s: (s // nk, s % nk, 0, 0)),
+                Operand((B, S, Hkv, D), dtype, (1, ck, Hkv, D),
+                        lambda s: (s // nk, s % nk, 0, 0))),
+        outputs=(Operand((B, H, D), jnp.float32, (1, H, D),
+                         lambda s: (s // nk, 0, 0)),
+                 Operand((B, H, 1), jnp.float32, (1, H, 1),
+                         lambda s: (s // nk, 0, 0)),
+                 Operand((B, H, 1), jnp.float32, (1, H, 1),
+                         lambda s: (s // nk, 0, 0))),
+        flops=2.0 * B * H * valid_len * D * 2,
+        hbm_bytes=2.0 * B * valid_len * Hkv * D * itemsize
+        + 2.0 * B * H * D * itemsize,
+        tag="framework:decode_attention")

@@ -1,0 +1,77 @@
+"""Flash attention Pallas kernel (train/prefill): 3-D grid
+(batch·head, q-block, kv-block) with online-softmax VMEM carries.
+
+Block sizes are MXU-aligned (multiples of 128 on the contracting dims).
+The causal mask is applied per (q-block, kv-block) tile; fully-masked tiles
+still stream (structural simplicity over triangle skipping — the cost model
+accounts the 2x; see EXPERIMENTS.md §Perf hillclimb #3 for the skip variant).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+                  *, nk: int, bq: int, bk: int, causal: bool, scale: float):
+    j = pl.program_id(2)
+    iq = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32) * scale           # (bq, D)
+    k = k_ref[0].astype(jnp.float32)                   # (bk, D)
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)  # (bq, bk)
+    if causal:
+        qpos = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = j * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        s = jnp.where(qpos >= kpos, s, NEG_INF)
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * alpha + p.sum(axis=-1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + jnp.dot(
+        p, v_ref[0].astype(jnp.float32), preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(j == nk - 1)
+    def _():
+        o_ref[0] = (acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)
+                    ).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, bq: int = 512,
+                    bk: int = 512, interpret: bool = False):
+    """q,k,v: (BH, S, D) — batch and heads pre-flattened (GQA callers repeat
+    or reshape KV before the call; see ops.flash_attention)."""
+    BH, S, D = q.shape
+    bq, bk = min(bq, S), min(bk, S)
+    assert S % bq == 0 and S % bk == 0
+    nq, nk = S // bq, S // bk
+    from jax.experimental.pallas import tpu as pltpu
+    scratch = [pltpu.VMEM((bq, 1), jnp.float32),
+               pltpu.VMEM((bq, 1), jnp.float32),
+               pltpu.VMEM((bq, D), jnp.float32)]
+    return pl.pallas_call(
+        functools.partial(_flash_kernel, nk=nk, bq=bq, bk=bk, causal=causal,
+                          scale=1.0 / math.sqrt(D)),
+        grid=(BH, nq, nk),
+        in_specs=[pl.BlockSpec((1, bq, D), lambda b, i, j: (b, i, 0)),
+                  pl.BlockSpec((1, bk, D), lambda b, i, j: (b, j, 0)),
+                  pl.BlockSpec((1, bk, D), lambda b, i, j: (b, j, 0))],
+        out_specs=pl.BlockSpec((1, bq, D), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, S, D), q.dtype),
+        scratch_shapes=scratch,
+        interpret=interpret,
+    )(q, k, v)

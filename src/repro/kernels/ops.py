@@ -1,0 +1,103 @@
+"""jit'd public wrappers for every kernel: Pallas on TPU, interpret-Pallas or
+the jnp oracle elsewhere (this container is CPU-only; TPU is the target).
+
+`use_pallas()` decides per-platform; `force` overrides for tests.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import adam as adam_k
+from repro.kernels import decode_attention as dec_k
+from repro.kernels import flash_attention as fa_k
+from repro.kernels import matmul as mm_k
+from repro.kernels import moe_gmm as gmm_k
+from repro.kernels import ref
+from repro.kernels import rmsnorm as rn_k
+
+_FORCE: Optional[str] = None      # None | "pallas" | "interpret" | "ref"
+
+
+def force(mode: Optional[str]):
+    global _FORCE
+    _FORCE = mode
+
+
+def _mode() -> str:
+    if _FORCE:
+        return _FORCE
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def matmul(x, w, bm=512, bn=512, bk=512):
+    m = _mode()
+    if m == "ref":
+        return ref.matmul(x, w)
+    return mm_k.matmul(x, w, bm=bm, bn=bn, bk=bk, interpret=(m == "interpret"))
+
+
+@jax.jit
+def rmsnorm(x, scale):
+    m = _mode()
+    if m == "ref":
+        return ref.rmsnorm(x, scale)
+    return rn_k.rmsnorm(x, scale, interpret=(m == "interpret"))
+
+
+@functools.partial(jax.jit, static_argnames=("causal",))
+def flash_attention(q, k, v, causal=True):
+    """q,k,v: (B,S,H,D) — GQA handled by repeating KV heads to H."""
+    m = _mode()
+    if m == "ref":
+        B, S, H, D = q.shape
+        rep = H // k.shape[2]
+        kr = jnp.repeat(k, rep, axis=2) if rep > 1 else k
+        vr = jnp.repeat(v, rep, axis=2) if rep > 1 else v
+        return ref.flash_attention(q, kr, vr, causal=causal)
+    B, S, H, D = q.shape
+    rep = H // k.shape[2]
+    kr = jnp.repeat(k, rep, axis=2) if rep > 1 else k
+    vr = jnp.repeat(v, rep, axis=2) if rep > 1 else v
+    qt = q.transpose(0, 2, 1, 3).reshape(B * H, S, D)
+    kt = kr.transpose(0, 2, 1, 3).reshape(B * H, S, D)
+    vt = vr.transpose(0, 2, 1, 3).reshape(B * H, S, D)
+    o = fa_k.flash_attention(qt, kt, vt, causal=causal,
+                             interpret=(m == "interpret"))
+    return o.reshape(B, H, S, D).transpose(0, 2, 1, 3)
+
+
+@functools.partial(jax.jit, static_argnames=("act", "bc"))
+def moe_gmm(xe, w_in, w_out, act="silu", bc=128):
+    m = _mode()
+    if m == "ref":
+        return ref.moe_gmm(xe, w_in, w_out, act=act)
+    return gmm_k.moe_gmm(xe, w_in, w_out, act=act, bc=bc,
+                         interpret=(m == "interpret"))
+
+
+def hfused_adamw(params, grads, m, v, *, lr, b1, b2, eps, wd, bc1, bc2):
+    """All per-tensor updates as ONE flat Pallas launch (paper §4.3 form)."""
+    p2, n = adam_k.flatten_for_adam(params)
+    g2, _ = adam_k.flatten_for_adam(grads)
+    m2, _ = adam_k.flatten_for_adam(m)
+    v2, _ = adam_k.flatten_for_adam(v)
+    scal = jnp.zeros((1, adam_k.LANES), jnp.float32)
+    scal = scal.at[0, 0].set(lr).at[0, 1].set(bc1).at[0, 2].set(bc2)
+    mode = _mode()
+    if mode == "ref":
+        po, mo, vo = ref.adamw(p2, g2, m2.astype(jnp.float32),
+                               v2.astype(jnp.float32), lr=lr, b1=b1, b2=b2,
+                               eps=eps, wd=wd, bc1=bc1, bc2=bc2)
+    else:
+        po, mo, vo = adam_k.adamw_flat(p2, g2, m2.astype(jnp.float32),
+                                       v2.astype(jnp.float32), scal,
+                                       b1=b1, b2=b2, eps=eps, wd=wd,
+                                       interpret=(mode == "interpret"))
+    return (adam_k.unflatten_from_adam(po, n, params),
+            adam_k.unflatten_from_adam(mo, n, m),
+            adam_k.unflatten_from_adam(vo, n, v))

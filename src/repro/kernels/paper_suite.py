@@ -1,0 +1,250 @@
+"""TPU analogues of the paper's 9 benchmark kernels (Fig. 8), as fusible
+OpSpecs (1-D grid + BlockSpecs + resource profile).
+
+The paper's kernels are CUDA; a mechanical port is meaningless on TPU
+(DESIGN.md §2).  What the evaluation needs is kernels with the *same
+resource-profile structure*, because the paper's claim is about resource
+complementarity, not about maxpool per se:
+
+  paper kernel   profile (Fig. 8)                    TPU analogue here
+  ------------   ---------------------------------   ------------------------
+  Maxpool        memory-bound (95% mem stalls)       maxpool    2:1 row reduce
+  Batchnorm      memory-bound reduction (52-60%)     bnstats    column Σ/Σx²
+  Upsample       memory-bound 1:2 expand (78-81%)    upsample   row duplicate
+  Im2Col         pure data movement (27-38%)         im2col     K-shift expand
+  Hist           atomic/compute mix (1-7% mem)       hist       one-hot count
+  Ethash         memory-hard (96% mem stalls)        ethash_like DAG stream+mix
+  SHA256         compute-bound (0% mem)              sha_like    16 matmul rounds
+  Blake256       compute-bound (1.3%)                blake_like  24 matmul rounds
+  Blake2B        compute-bound (1.7%)                blake2b_like 20 matmul rounds
+
+Each factory returns (OpSpec, make_inputs, ref_fn); the oracle lives in
+repro/kernels/ref.py and tests sweep shapes/dtypes in interpret mode.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.op_spec import OpSpec, Operand
+from repro.kernels import ref as ref_mod
+
+LANES = 128
+
+
+def _bytes(*arrs_shapes_dtypes):
+    total = 0
+    for shape, dt in arrs_shapes_dtypes:
+        total += math.prod(shape) * jnp.dtype(dt).itemsize
+    return total
+
+
+# ---------------------------------------------------------------------------
+# Memory-bound atoms
+# ---------------------------------------------------------------------------
+def make_maxpool(R=8192, C=512, dtype=jnp.float32, bm=256):
+    assert R % bm == 0 and bm % 2 == 0
+
+    def body(step, x_ref, o_ref):
+        x = x_ref[...]
+        o_ref[...] = x.reshape(x.shape[0] // 2, 2, x.shape[1]).max(axis=1)
+
+    op = OpSpec(
+        name="maxpool", grid=R // bm, body=body,
+        inputs=(Operand((R, C), dtype, (bm, C), lambda s: (s, 0)),),
+        outputs=(Operand((R // 2, C), dtype, (bm // 2, C), lambda s: (s, 0)),),
+        flops=1.0 * R * C,                       # one max per input element
+        hbm_bytes=_bytes(((R, C), dtype), ((R // 2, C), dtype)),
+        tag="paper:Maxpool")
+    mk = lambda key: (jax.random.normal(key, (R, C), dtype),)
+    return op, mk, ref_mod.maxpool
+
+
+def make_upsample(R=4096, C=512, dtype=jnp.float32, bm=256):
+    assert R % bm == 0
+
+    def body(step, x_ref, o_ref):
+        x = x_ref[...]
+        y = jnp.broadcast_to(x[:, None, :], (x.shape[0], 2, x.shape[1]))
+        o_ref[...] = y.reshape(2 * x.shape[0], x.shape[1])
+
+    op = OpSpec(
+        name="upsample", grid=R // bm, body=body,
+        inputs=(Operand((R, C), dtype, (bm, C), lambda s: (s, 0)),),
+        outputs=(Operand((2 * R, C), dtype, (2 * bm, C), lambda s: (s, 0)),),
+        flops=0.5 * R * C,                       # ~free; traffic dominates
+        hbm_bytes=_bytes(((R, C), dtype), ((2 * R, C), dtype)),
+        tag="paper:Upsample")
+    mk = lambda key: (jax.random.normal(key, (R, C), dtype),)
+    return op, mk, ref_mod.upsample
+
+
+def make_bnstats(R=16384, C=512, dtype=jnp.float32, bm=512):
+    assert R % bm == 0
+
+    def body(step, x_ref, stats_ref):
+        @pl.when(step == 0)
+        def _():
+            stats_ref[...] = jnp.zeros_like(stats_ref)
+        x = x_ref[...].astype(jnp.float32)
+        stats_ref[0, :] += x.sum(axis=0)
+        stats_ref[1, :] += (x * x).sum(axis=0)
+
+    op = OpSpec(
+        name="bnstats", grid=R // bm, body=body,
+        inputs=(Operand((R, C), dtype, (bm, C), lambda s: (s, 0)),),
+        outputs=(Operand((2, C), jnp.float32, (2, C), lambda s: (0, 0)),),
+        flops=3.0 * R * C,
+        hbm_bytes=_bytes(((R, C), dtype), ((2, C), jnp.float32)),
+        tag="paper:Batchnorm")
+    mk = lambda key: (jax.random.normal(key, (R, C), dtype),)
+    return op, mk, ref_mod.bnstats
+
+
+def make_im2col(R=4096, C=512, dtype=jnp.float32, bm=256, K=4):
+    assert R % bm == 0
+
+    def body(step, x_ref, o_ref):
+        x = x_ref[...]
+        outs = []
+        for k in range(K):
+            outs.append(jnp.concatenate([x[:, k:], x[:, :k]], axis=1))
+        o_ref[...] = jnp.concatenate(outs, axis=1)
+
+    op = OpSpec(
+        name="im2col", grid=R // bm, body=body,
+        inputs=(Operand((R, C), dtype, (bm, C), lambda s: (s, 0)),),
+        outputs=(Operand((R, K * C), dtype, (bm, K * C), lambda s: (s, 0)),),
+        flops=0.5 * R * C * K,
+        hbm_bytes=_bytes(((R, C), dtype), ((R, K * C), dtype)),
+        tag="paper:Im2Col")
+    mk = lambda key: (jax.random.normal(key, (R, C), dtype),)
+    return op, mk, partial(ref_mod.im2col, K=K)
+
+
+def make_ethash_like(R_dag=65536, C=LANES, dtype=jnp.float32, bm=512, seed_rows=512):
+    """Memory-hard: stream a large DAG, tiny mixing matmul per block."""
+    assert R_dag % bm == 0 and seed_rows % bm == 0 or True
+
+    def body(step, dag_ref, x_ref, w_ref, o_ref):
+        @pl.when(step == 0)
+        def _():
+            o_ref[...] = jnp.zeros_like(o_ref)
+        mix = (x_ref[...] + dag_ref[...]).astype(jnp.float32)
+        o_ref[...] += jnp.tanh(mix @ w_ref[...].astype(jnp.float32)
+                               ).astype(o_ref.dtype)
+
+    op = OpSpec(
+        name="ethash_like", grid=R_dag // bm, body=body,
+        inputs=(Operand((R_dag, C), dtype, (bm, C), lambda s: (s, 0)),
+                Operand((bm, C), dtype, (bm, C), lambda s: (0, 0)),
+                Operand((C, C), jnp.float32, (C, C), lambda s: (0, 0))),
+        outputs=(Operand((bm, C), jnp.float32, (bm, C), lambda s: (0, 0)),),
+        flops=2.0 * R_dag * C * C + 3.0 * R_dag * C,
+        hbm_bytes=_bytes(((R_dag, C), dtype)) + _bytes(((bm, C), dtype)) * 2,
+        tag="paper:Ethash")
+
+    def mk(key):
+        k1, k2, k3 = jax.random.split(key, 3)
+        return (jax.random.normal(k1, (R_dag, C), dtype) * 0.1,
+                jax.random.normal(k2, (bm, C), dtype) * 0.1,
+                jax.random.normal(k3, (C, C), jnp.float32) / math.sqrt(C))
+    return op, mk, ref_mod.ethash_like
+
+
+def make_hist(R=2048, C=256, dtype=jnp.float32, bm=64, bins=LANES):
+    assert R % bm == 0
+
+    def body(step, x_ref, o_ref):
+        @pl.when(step == 0)
+        def _():
+            o_ref[...] = jnp.zeros_like(o_ref)
+        x = x_ref[...].astype(jnp.float32)
+        b = jnp.clip(((x + 4.0) * (bins / 8.0)), 0, bins - 1).astype(jnp.int32)
+        flat = b.reshape(-1, 1)
+        eq = (flat == jax.lax.broadcasted_iota(jnp.int32, (1, bins), 1))
+        o_ref[...] += eq.astype(jnp.float32).sum(axis=0, keepdims=True)
+
+    op = OpSpec(
+        name="hist", grid=R // bm, body=body,
+        inputs=(Operand((R, C), dtype, (bm, C), lambda s: (s, 0)),),
+        outputs=(Operand((1, bins), jnp.float32, (1, bins), lambda s: (0, 0)),),
+        flops=2.0 * R * C * bins,        # compare+add per (elem, bin)
+        hbm_bytes=_bytes(((R, C), dtype), ((1, bins), jnp.float32)),
+        tag="paper:Hist")
+    mk = lambda key: (jax.random.normal(key, (R, C), dtype),)
+    return op, mk, partial(ref_mod.hist, bins=bins)
+
+
+# ---------------------------------------------------------------------------
+# Compute-bound atoms (hash-kernel analogues: iterated mixing matmuls)
+# ---------------------------------------------------------------------------
+def _make_hash_like(name: str, rounds: int, R=4096, C=LANES,
+                    dtype=jnp.float32, bm=512):
+    assert R % bm == 0
+
+    def body(step, x_ref, w_ref, o_ref):
+        s = x_ref[...].astype(jnp.float32)
+        w = w_ref[...].astype(jnp.float32)
+        for _ in range(rounds):
+            s = jnp.tanh(s @ w)
+        o_ref[...] = s.astype(o_ref.dtype)
+
+    op = OpSpec(
+        name=name, grid=R // bm, body=body,
+        inputs=(Operand((R, C), dtype, (bm, C), lambda s: (s, 0)),
+                Operand((C, C), jnp.float32, (C, C), lambda s: (0, 0))),
+        outputs=(Operand((R, C), dtype, (bm, C), lambda s: (s, 0)),),
+        flops=rounds * 2.0 * R * C * C + rounds * 2.0 * R * C,
+        hbm_bytes=_bytes(((R, C), dtype)) * 2,
+        tag=f"paper:{name}")
+
+    def mk(key):
+        k1, k2 = jax.random.split(key)
+        return (jax.random.normal(k1, (R, C), dtype) * 0.1,
+                jax.random.normal(k2, (C, C), jnp.float32) / math.sqrt(C))
+    return op, mk, partial(ref_mod.hash_like, rounds=rounds)
+
+
+def make_sha_like(**kw):
+    return _make_hash_like("sha_like", rounds=16, **kw)
+
+
+def make_blake_like(**kw):
+    return _make_hash_like("blake_like", rounds=24, **kw)
+
+
+def make_blake2b_like(**kw):
+    return _make_hash_like("blake2b_like", rounds=20, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Registry (paper benchmark sets)
+# ---------------------------------------------------------------------------
+DL_KERNELS = {
+    "maxpool": make_maxpool,
+    "bnstats": make_bnstats,
+    "upsample": make_upsample,
+    "im2col": make_im2col,
+    "hist": make_hist,
+}
+CRYPTO_KERNELS = {
+    "ethash_like": make_ethash_like,
+    "sha_like": make_sha_like,
+    "blake_like": make_blake_like,
+    "blake2b_like": make_blake2b_like,
+}
+ALL_KERNELS = {**DL_KERNELS, **CRYPTO_KERNELS}
+
+
+def paper_pairs() -> list[tuple[str, str]]:
+    """The 16 benchmark pairs: C(5,2)=10 DL + C(4,2)=6 crypto."""
+    dl = list(DL_KERNELS)
+    cr = list(CRYPTO_KERNELS)
+    pairs = [(a, b) for i, a in enumerate(dl) for b in dl[i + 1:]]
+    pairs += [(a, b) for i, a in enumerate(cr) for b in cr[i + 1:]]
+    return pairs

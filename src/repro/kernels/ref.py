@@ -1,0 +1,117 @@
+"""Pure-jnp oracles for every kernel in repro/kernels (the ``ref.py`` of the
+<name>.py + ops.py + ref.py convention).  Tests assert_allclose the Pallas
+kernels (interpret mode) against these, sweeping shapes and dtypes.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# paper_suite
+# ---------------------------------------------------------------------------
+def maxpool(x):
+    R, C = x.shape
+    return x.reshape(R // 2, 2, C).max(axis=1)
+
+
+def upsample(x):
+    R, C = x.shape
+    return jnp.broadcast_to(x[:, None, :], (R, 2, C)).reshape(2 * R, C)
+
+
+def bnstats(x):
+    xf = x.astype(jnp.float32)
+    return jnp.stack([xf.sum(0), (xf * xf).sum(0)])
+
+
+def im2col(x, K=4):
+    outs = [jnp.concatenate([x[:, k:], x[:, :k]], axis=1) for k in range(K)]
+    return jnp.concatenate(outs, axis=1)
+
+
+def hist(x, bins=128):
+    xf = x.astype(jnp.float32)
+    b = jnp.clip((xf + 4.0) * (bins / 8.0), 0, bins - 1).astype(jnp.int32)
+    return jnp.zeros((1, bins), jnp.float32).at[0, b.reshape(-1)].add(1.0)
+
+
+def ethash_like(dag, x, w):
+    bm = x.shape[0]
+    R = dag.shape[0]
+    out = jnp.zeros((bm, dag.shape[1]), jnp.float32)
+    for s in range(R // bm):
+        mix = (x + dag[s * bm:(s + 1) * bm]).astype(jnp.float32)
+        out = out + jnp.tanh(mix @ w.astype(jnp.float32))
+    return out
+
+
+def hash_like(x, w, rounds=16):
+    s = x.astype(jnp.float32)
+    wf = w.astype(jnp.float32)
+    for _ in range(rounds):
+        s = jnp.tanh(s @ wf)
+    return s.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# framework kernels
+# ---------------------------------------------------------------------------
+def matmul(x, w):
+    return jnp.dot(x, w, preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def rmsnorm(x, scale, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * (1.0 + scale)).astype(x.dtype)
+
+
+def flash_attention(q, k, v, causal=True):
+    """q,k,v: (B,S,H,D) — plain softmax attention oracle."""
+    B, S, H, D = q.shape
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                   preferred_element_type=jnp.float32) / math.sqrt(D)
+    if causal:
+        mask = jnp.tril(jnp.ones((S, S), bool))
+        s = jnp.where(mask, s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", w.astype(v.dtype), v)
+
+
+def decode_attention(q, k, v, length):
+    """q: (B,H,D); k,v: (B,S,Hkv,D); attend to first `length` positions."""
+    B, H, D = q.shape
+    Hkv = k.shape[2]
+    rep = H // Hkv
+    qg = q.reshape(B, Hkv, rep, D)
+    s = jnp.einsum("bhrd,bkhd->bhrk", qg, k,
+                   preferred_element_type=jnp.float32) / math.sqrt(D)
+    valid = jnp.arange(k.shape[1])[None, None, None, :] < length
+    s = jnp.where(valid, s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhrk,bkhd->bhrd", w.astype(v.dtype), v)
+    return o.reshape(B, H, D)
+
+
+def moe_gmm(xe, w_in, w_out, act="silu"):
+    """xe: (E,C,d); w_in: (E,d,2f|f); w_out: (E,f,d)."""
+    h = jnp.einsum("ecd,edf->ecf", xe, w_in)
+    f = w_out.shape[1]
+    if w_in.shape[-1] == 2 * f:
+        g, u = jnp.split(h, 2, axis=-1)
+        h = (jax.nn.silu(g) if act == "silu" else jax.nn.gelu(g)) * u
+    else:
+        h = jax.nn.gelu(h)
+    return jnp.einsum("ecf,efd->ecd", h, w_out)
+
+
+def adamw(p, g, m, v, *, lr, b1, b2, eps, wd, bc1, bc2):
+    gf = g.astype(jnp.float32)
+    m2 = b1 * m + (1 - b1) * gf
+    v2 = b2 * v + (1 - b2) * gf * gf
+    step = (m2 / bc1) / (jnp.sqrt(v2 / bc2) + eps) + wd * p.astype(jnp.float32)
+    return (p.astype(jnp.float32) - lr * step).astype(p.dtype), m2, v2

@@ -1,0 +1,266 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST be the first two lines: jax locks the device count on first init.
+
+"""Multi-pod dry-run: lower + compile every (architecture × input shape) on
+the production meshes, record memory_analysis / cost_analysis / collective
+bytes as JSON artifacts for §Dry-run and §Roofline of EXPERIMENTS.md.
+
+  PYTHONPATH=src python -m repro.launch.dryrun --arch granite-3-2b \
+      --shape train_4k --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+
+Exit code is non-zero if any attempted cell fails (sharding mismatch,
+OOM at compile, unsupported collective) — those are bugs in the system.
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro import runtime_flags
+
+from repro.configs import SHAPES, get_config, list_archs, shape_applicable
+from repro.distributed import sharding as shd
+from repro.distributed.hlo_analysis import (analyze_compiled,
+                                            memory_analysis_dict)
+from repro.launch import input_specs as ispecs
+from repro.launch.mesh import make_production_mesh
+from repro.models import lm
+from repro.models.base import abstract_params, logical_axes
+from repro.train import optimizer as opt_mod
+from repro.train.train_loop import TrainConfig, make_train_step
+
+ARTIFACTS = Path(__file__).resolve().parents[3] / "artifacts" / "dryrun"
+
+
+def model_flops(cfg, shape) -> float:
+    """6·N_active·D (train) / 2·N_active·D (fwd-only), whole step, all chips."""
+    n = lm.count_params(cfg, active_only=True)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    tokens = shape.global_batch                      # one new token per seq
+    return 2.0 * n * tokens
+
+
+def build_cell(cfg, shape, mesh):
+    """Returns (fn, args, in_shardings, donate) for lowering one cell."""
+    rules = shd.rules_for(cfg, mesh, kind=shape.kind)
+    specs = lm.param_specs(cfg)
+    params_ab = abstract_params(specs, jnp.dtype(cfg.dtype))
+    params_sh = shd.sharding_tree(params_ab, logical_axes(specs), mesh, rules)
+
+    def batch_shardings(batch):
+        out = {}
+        for k, v in batch.items():
+            if k == "pixel_embeds":
+                ax = ("batch", None, None)
+            elif v.ndim == 3:
+                ax = ("batch", None, "seq")          # audio (B,K,S)
+            elif v.ndim == 2:
+                ax = ("batch", "seq")
+            else:
+                ax = ("batch",)
+            out[k] = shd.NamedSharding(mesh, shd.resolve_pspec(ax, v.shape,
+                                                               mesh, rules))
+        return out
+
+    ins = ispecs.input_specs(cfg, shape)
+    if shape.kind == "train":
+        tcfg = TrainConfig()
+        step_fn = make_train_step(cfg, tcfg, mesh)
+        # moments are fp32 but share the params' shapes => same shardings
+        opt_sh = opt_mod.OptState(m=params_sh, v=params_sh,
+                                  count=shd.replicated(mesh))
+        opt_ab = opt_mod.OptState(
+            m=jax.tree.map(lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32),
+                           params_ab),
+            v=jax.tree.map(lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32),
+                           params_ab),
+            count=jax.ShapeDtypeStruct((), jnp.int32))
+        batch_ab = ins["batch"]
+        args = (params_ab, opt_ab, batch_ab, jax.ShapeDtypeStruct((), jnp.int32))
+        in_sh = (params_sh, opt_sh, batch_shardings(batch_ab),
+                 shd.replicated(mesh))
+        return step_fn, args, in_sh, (0, 1)
+
+    if shape.kind == "prefill":
+        def prefill_step(params, batch):
+            return lm.prefill(cfg, params, batch, max_len=shape.seq_len)
+        batch_ab = ins["batch"]
+        args = (params_ab, batch_ab)
+        in_sh = (params_sh, batch_shardings(batch_ab))
+        return prefill_step, args, in_sh, ()
+
+    # decode
+    if os.environ.get("REPRO_GREEDY_SERVE"):
+        def serve_step(params, cache, tokens):
+            return lm.serve_step_greedy(cfg, params, cache, tokens)
+    else:
+        def serve_step(params, cache, tokens):
+            return lm.decode_step(cfg, params, cache, tokens)
+
+    cache_ab = ins["cache"]
+    cache_ax = lm.cache_logical_axes(cfg, shape.global_batch, shape.seq_len)
+    cache_sh = shd.sharding_tree(cache_ab, cache_ax, mesh, rules)
+    tok_ab = ins["tokens"]
+    tok_sh = shd.NamedSharding(mesh, shd.resolve_pspec(
+        ("batch",) + (None,) * (tok_ab.ndim - 1), tok_ab.shape, mesh, rules))
+    args = (params_ab, cache_ab, tok_ab)
+    in_sh = (params_sh, cache_sh, tok_sh)
+    return serve_step, args, in_sh, (1,)
+
+
+def scale_depth(cfg, depth: int):
+    """PREFIX-truncated config (first `depth` layers).
+
+    Exact-roofline path: lower unrolled at two prefix depths d1 < d2 chosen
+    as 1 and 2 pattern *units* (dense: 1 layer; recurrentgemma: 3 (rec,rec,
+    attn); xlstm: 8 (7 mLSTM + sLSTM); deepseek: the dense first layer lands
+    in the shared overhead).  Then per-unit cost = (C(d2)-C(d1))/(units2-
+    units1), total(L) = C(d1) + per_unit * (L-d1)/unit — exact because units
+    are homogeneous by construction.  See EXPERIMENTS.md §Methodology.
+    """
+    pat = cfg.pattern
+    L = len(pat)
+    if depth >= L:
+        return cfg
+    new_pat = tuple(pat[:depth])
+    overrides = {i: v for i, v in cfg.moe_layer_overrides.items() if i < depth}
+    return dataclasses.replace(cfg, num_layers=depth, block_pattern=new_pat,
+                               moe_layer_overrides=overrides,
+                               name=f"{cfg.name}@L{depth}")
+
+
+#: per-arch pattern-unit size for the two-point roofline extrapolation
+PATTERN_UNIT = {"recurrentgemma-2b": 3, "xlstm-1.3b": 8}
+
+
+def depth_pair(arch: str) -> tuple[int, int]:
+    u = PATTERN_UNIT.get(arch, 1)
+    base = 2 if u == 1 else u
+    return base, 2 * base
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: Path,
+             depth: int = 0, tag: str = "") -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, why = shape_applicable(cfg, shape)
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+           "unrolled": runtime_flags.UNROLL_SCANS, "depth": depth or cfg.num_layers,
+           "full_depth": cfg.num_layers}
+    if not ok:
+        rec.update(status="SKIP", reason=why)
+        out_dir.mkdir(parents=True, exist_ok=True)
+        (out_dir / f"{arch}__{shape_name}__{mesh_kind}{tag}.json").write_text(
+            json.dumps(rec, indent=1, default=float))
+        return rec
+    if depth:
+        cfg = scale_depth(cfg, depth)
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    n_dev = mesh.size
+    rules = shd.rules_for(cfg, mesh, kind=shape.kind)
+    t0 = time.time()
+    try:
+        with shd.use_sharding(mesh, rules):
+            fn, args, in_sh, donate = build_cell(cfg, shape, mesh)
+            jfn = jax.jit(fn, in_shardings=in_sh, donate_argnums=donate)
+            lowered = jfn.lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+        mem = memory_analysis_dict(compiled)
+        roof = analyze_compiled(compiled, n_dev)
+        mf = model_flops(cfg, shape)
+        rec.update(
+            status="OK",
+            n_devices=n_dev,
+            t_lower_s=round(t_lower, 2),
+            t_compile_s=round(t_compile, 2),
+            memory=mem,
+            roofline=roof.summary(),
+            model_flops_total=mf,
+            model_flops_per_chip=mf / n_dev,
+            useful_flops_ratio=(mf / n_dev) / max(roof.flops, 1.0),
+        )
+    except Exception as e:
+        rec.update(status="FAIL", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-4000:])
+    out_dir.mkdir(parents=True, exist_ok=True)
+    out = out_dir / f"{arch}__{shape_name}__{mesh_kind}{tag}.json"
+    out.write_text(json.dumps(rec, indent=1, default=float))
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", action="append", default=None)
+    ap.add_argument("--shape", action="append", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="both")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=str(ARTIFACTS))
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--unroll", action="store_true",
+                    help="unroll layer/KV scans so cost_analysis counts the "
+                         "whole program (XLA counts while-loop bodies once); "
+                         "exact roofline numbers at higher compile cost")
+    ap.add_argument("--depth", type=int, default=0,
+                    help="reduce layer count (pattern-preserving) — the "
+                         "roofline pipeline lowers unrolled at two depths "
+                         "and extrapolates per-layer costs linearly")
+    ap.add_argument("--tag", default="",
+                    help="artifact filename suffix (e.g. _d4 for depth runs)")
+    args = ap.parse_args()
+    runtime_flags.UNROLL_SCANS = bool(args.unroll or os.environ.get("REPRO_UNROLL"))
+
+    archs = args.arch or (list_archs() if args.all else [])
+    shapes = args.shape or list(SHAPES)
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    if not archs:
+        ap.error("pass --arch <id> (repeatable) or --all")
+
+    out_dir = Path(args.out)
+    failures = 0
+    for arch in archs:
+        for shape_name in shapes:
+            for mesh_kind in meshes:
+                tgt = out_dir / f"{arch}__{shape_name}__{mesh_kind}{args.tag}.json"
+                if args.skip_existing and tgt.exists():
+                    rec = json.loads(tgt.read_text())
+                    if rec.get("status") in ("OK", "SKIP"):
+                        print(f"[cached] {arch} {shape_name} {mesh_kind}: "
+                              f"{rec['status']}", flush=True)
+                        continue
+                t0 = time.time()
+                rec = run_cell(arch, shape_name, mesh_kind, out_dir,
+                               depth=args.depth, tag=args.tag)
+                dt = time.time() - t0
+                if rec["status"] == "OK":
+                    r = rec["roofline"]
+                    print(f"[{rec['status']}] {arch} {shape_name} {mesh_kind} "
+                          f"({dt:.0f}s): dominant={r['dominant']} "
+                          f"tc={r['t_compute_s']:.3e} tm={r['t_memory_s']:.3e} "
+                          f"tcoll={r['t_collective_s']:.3e}", flush=True)
+                elif rec["status"] == "SKIP":
+                    print(f"[SKIP] {arch} {shape_name} {mesh_kind}: "
+                          f"{rec['reason'][:80]}", flush=True)
+                else:
+                    failures += 1
+                    print(f"[FAIL] {arch} {shape_name} {mesh_kind}: "
+                          f"{rec['error']}", flush=True)
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""ShapeDtypeStruct stand-ins for every model input, per (arch × shape) —
+weak-type-correct, shardable, zero allocation.  Frontends are stubs per the
+assignment: the VLM supplies precomputed patch embeddings, the audio arch
+supplies EnCodec codebook token ids.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import lm
+
+
+def train_batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if cfg.frontend == "audio_stub":
+        return {"tokens": jax.ShapeDtypeStruct((B, cfg.num_codebooks, S), i32),
+                "labels": jax.ShapeDtypeStruct((B, cfg.num_codebooks, S), i32)}
+    batch = {"tokens": jax.ShapeDtypeStruct((B, S), i32),
+             "labels": jax.ShapeDtypeStruct((B, S), i32)}
+    if cfg.frontend == "vision_stub":
+        batch["pixel_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.num_image_tokens, cfg.d_model), jnp.dtype(cfg.dtype))
+    return batch
+
+
+def prefill_batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    b = train_batch_specs(cfg, shape)
+    b.pop("labels")
+    return b
+
+
+def decode_token_specs(cfg: ModelConfig, shape: ShapeConfig):
+    B = shape.global_batch
+    if cfg.frontend == "audio_stub":
+        return jax.ShapeDtypeStruct((B, cfg.num_codebooks), jnp.int32)
+    return jax.ShapeDtypeStruct((B,), jnp.int32)
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeConfig):
+    """Abstract KV/recurrent cache for a decode step at context length S."""
+    B, S = shape.global_batch, shape.seq_len
+    return jax.eval_shape(lambda: lm.init_cache(cfg, B, S))
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """Everything the step function for this shape consumes (sans params)."""
+    if shape.kind == "train":
+        return {"batch": train_batch_specs(cfg, shape)}
+    if shape.kind == "prefill":
+        return {"batch": prefill_batch_specs(cfg, shape)}
+    if shape.kind == "decode":
+        return {"cache": cache_specs(cfg, shape),
+                "tokens": decode_token_specs(cfg, shape)}
+    raise ValueError(shape.kind)

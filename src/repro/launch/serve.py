@@ -1,0 +1,54 @@
+"""Serving launcher (smoke-scale by default).
+
+  PYTHONPATH=src python -m repro.launch.serve --arch granite-3-2b \
+      --requests 12 --prompt-len 16 --max-new 8
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import lm
+from repro.serve.engine import Request, ServeEngine
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--scale", choices=["smoke", "full"], default="smoke")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.scale == "smoke":
+        cfg = cfg.reduced()
+    params = lm.init(cfg, jax.random.PRNGKey(0))
+    engine = ServeEngine(cfg, params, batch=args.batch,
+                         max_len=args.prompt_len + args.max_new + 8)
+    rng = np.random.default_rng(0)
+    reqs = [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab_size,
+                                        args.prompt_len).astype(np.int32),
+                    max_new_tokens=args.max_new,
+                    temperature=args.temperature)
+            for i in range(args.requests)]
+    t0 = time.time()
+    engine.run(reqs)
+    dt = time.time() - t0
+    total_new = sum(len(r.out_tokens) for r in reqs)
+    print(f"served {len(reqs)} requests, {total_new} tokens "
+          f"in {dt:.2f}s ({total_new / dt:.1f} tok/s)")
+    for r in reqs[:3]:
+        print(f"  req {r.rid}: {r.out_tokens}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+from repro.models import base, layers, lm, mla, moe, rglru, xlstm  # noqa: F401

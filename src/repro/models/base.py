@@ -1,0 +1,133 @@
+"""Parameter-spec system.
+
+A model is described by a *spec tree*: a nested dict whose leaves are
+``ParamSpec(shape, axes, init)``.  From one spec tree we derive, guaranteed
+consistent with each other:
+
+  * concrete parameters          (``init_params``)
+  * abstract parameters          (``abstract_params`` — ShapeDtypeStructs,
+                                  used by the dry-run: no allocation)
+  * logical partition specs      (``logical_axes`` — resolved to mesh axes by
+                                  ``repro.distributed.sharding``)
+
+Logical axis vocabulary (resolved per-family in distributed/sharding.py):
+  "embed"   d_model dim            "ffn"     MLP hidden dim
+  "heads"   query heads            "kv_heads" kv heads
+  "qkv"     fused q/k/v output     "vocab"   vocabulary
+  "expert"  MoE expert count       "layer"   stacked scan dim
+  "lru"     recurrent width        None      replicated
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple[int, ...]
+    axes: tuple[Optional[str], ...]
+    init: str = "normal"            # normal | zeros | ones | embed | out_proj
+    dtype: Optional[str] = None     # overrides model dtype (e.g. fp32 gate biases)
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+SpecTree = dict  # nested dict[str, SpecTree | ParamSpec]
+
+
+def _fan_in(shape: tuple[int, ...]) -> int:
+    # weight matrices here are (in, out) or (..., in, out)
+    return shape[-2] if len(shape) >= 2 else shape[-1]
+
+
+def _init_leaf(spec: ParamSpec, key: jax.Array, dtype) -> jax.Array:
+    dt = jnp.dtype(spec.dtype) if spec.dtype else dtype
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, dt)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, dt)
+    if spec.init == "embed":
+        scale = 1.0
+    elif spec.init == "out_proj":
+        scale = 1.0 / math.sqrt(2.0 * max(1, _fan_in(spec.shape)))
+    else:
+        scale = 1.0 / math.sqrt(max(1, _fan_in(spec.shape)))
+    return (jax.random.normal(key, spec.shape, jnp.float32) * scale).astype(dt)
+
+
+def _tree_map_with_key(fn: Callable, tree: SpecTree, key: jax.Array):
+    """Map fn(spec, key) over leaves with independent, deterministic keys."""
+    leaves = []
+
+    def walk(t, path):
+        if isinstance(t, ParamSpec):
+            leaves.append((path, t))
+        else:
+            for k in sorted(t):
+                walk(t[k], path + (k,))
+
+    walk(tree, ())
+    keys = jax.random.split(key, max(1, len(leaves)))
+    out: dict = {}
+    for (path, spec), k in zip(leaves, keys):
+        node = out
+        for p in path[:-1]:
+            node = node.setdefault(p, {})
+        node[path[-1]] = fn(spec, k)
+    return out
+
+
+def init_params(specs: SpecTree, key: jax.Array, dtype=jnp.bfloat16):
+    return _tree_map_with_key(lambda s, k: _init_leaf(s, k, dtype), specs, key)
+
+
+def abstract_params(specs: SpecTree, dtype=jnp.bfloat16):
+    def mk(s: ParamSpec, _k):
+        dt = jnp.dtype(s.dtype) if s.dtype else dtype
+        return jax.ShapeDtypeStruct(s.shape, dt)
+    return _tree_map_with_key(mk, specs, jax.random.PRNGKey(0))
+
+
+def logical_axes(specs: SpecTree):
+    def mk(s: ParamSpec, _k):
+        return s.axes
+    return _tree_map_with_key(mk, specs, jax.random.PRNGKey(0))
+
+
+def stack_specs(specs: SpecTree, n: int) -> SpecTree:
+    """Prepend a stacked 'layer' dim to every leaf (for lax.scan runs)."""
+    def walk(t):
+        if isinstance(t, ParamSpec):
+            return ParamSpec((n,) + t.shape, ("layer",) + t.axes, t.init, t.dtype)
+        return {k: walk(v) for k, v in t.items()}
+    return walk(specs)
+
+
+def count_spec_params(specs: SpecTree) -> int:
+    total = 0
+
+    def walk(t):
+        nonlocal total
+        if isinstance(t, ParamSpec):
+            total += int(np.prod(t.shape))
+        else:
+            for v in t.values():
+                walk(v)
+
+    walk(specs)
+    return total
+
+
+# ---------------------------------------------------------------------------
+# Common spec builders
+# ---------------------------------------------------------------------------
+def dense_spec(d_in: int, d_out: int, axes=( "embed", "ffn"), init="normal") -> ParamSpec:
+    return ParamSpec((d_in, d_out), axes, init)

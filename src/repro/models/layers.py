@@ -1,0 +1,306 @@
+"""Shared transformer layers — pure JAX, functional, roofline-honest.
+
+Attention is implemented *blockwise* (flash-style running-max/sum over KV
+chunks) so that the lowered HLO streams O(S·d) bytes instead of
+materializing S×S score matrices: the dry-run roofline reads bytes from the
+compiled HLO, so the jnp reference path must have the same asymptotic memory
+behaviour as the Pallas TPU kernels in repro/kernels/.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.sharding import shard
+from repro.runtime_flags import maybe_scan
+from repro.models.base import ParamSpec
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+def rmsnorm_spec(d: int) -> dict:
+    return {"scale": ParamSpec((d,), ("embed",), "zeros", dtype="float32")}
+
+
+def rmsnorm(p, x, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps) * (1.0 + p["scale"])
+    return y.astype(x.dtype)
+
+
+def layernorm_spec(d: int) -> dict:
+    return {"scale": ParamSpec((d,), ("embed",), "ones", dtype="float32"),
+            "bias": ParamSpec((d,), ("embed",), "zeros", dtype="float32")}
+
+
+def layernorm(p, x, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps) * p["scale"] + p["bias"]
+    return y.astype(x.dtype)
+
+
+def norm_spec(cfg, d=None) -> dict:
+    d = d or cfg.d_model
+    return rmsnorm_spec(d) if cfg.norm == "rmsnorm" else layernorm_spec(d)
+
+
+def apply_norm(cfg, p, x):
+    return rmsnorm(p, x) if cfg.norm == "rmsnorm" else layernorm(p, x)
+
+
+# ---------------------------------------------------------------------------
+# RoPE (partial-fraction support)
+# ---------------------------------------------------------------------------
+def rope(x: jax.Array, positions: jax.Array, theta: float, fraction: float = 1.0):
+    """x: (..., S, H, D); positions: broadcastable to (..., S)."""
+    d = x.shape[-1]
+    rot = int(d * fraction) // 2 * 2
+    if rot == 0:
+        return x
+    x_rot, x_pass = x[..., :rot], x[..., rot:]
+    half = rot // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None, None].astype(jnp.float32) * freqs  # (..., S,1,half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x_rot[..., :half], x_rot[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return jnp.concatenate([out.astype(x.dtype), x_pass], axis=-1)
+
+
+def sinusoidal_embed(positions: jax.Array, d: int) -> jax.Array:
+    half = d // 2
+    freqs = 10_000.0 ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# MLPs.  Gated variants use ONE fused (d, 2f) weight: the shared-input case of
+# horizontal fusion (DESIGN.md §4.1) — gate and up matmuls become one kernel.
+# ---------------------------------------------------------------------------
+def mlp_spec(cfg) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    if cfg.activation in ("silu", "gelu"):       # gated (SwiGLU / GeGLU)
+        return {"w_in": ParamSpec((d, 2 * f), ("embed", "ffn")),
+                "w_out": ParamSpec((f, d), ("ffn", "embed"), "out_proj")}
+    return {"w_in": ParamSpec((d, f), ("embed", "ffn")),
+            "w_out": ParamSpec((f, d), ("ffn", "embed"), "out_proj")}
+
+
+def mlp(cfg, p, x, d_ff: Optional[int] = None):
+    act = cfg.activation
+    h = x @ p["w_in"]
+    if act in ("silu", "gelu"):
+        gate, up = jnp.split(h, 2, axis=-1)
+        g = jax.nn.silu(gate) if act == "silu" else jax.nn.gelu(gate)
+        h = g * up
+    elif act == "gelu_mlp":
+        h = jax.nn.gelu(h)
+    elif act == "relu2_mlp":
+        h = jnp.square(jax.nn.relu(h))
+    else:
+        raise ValueError(act)
+    h = shard(h, ("batch", "seq", "act_ffn"))
+    return h @ p["w_out"]
+
+
+# ---------------------------------------------------------------------------
+# GQA attention — blockwise (flash-style) for train/prefill
+# ---------------------------------------------------------------------------
+def attn_spec(cfg) -> dict:
+    d, H, Hkv, Dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    # fused QKV projection: horizontal fusion of the three shared-input matmuls
+    return {"w_qkv": ParamSpec((d, (H + 2 * Hkv) * Dh), ("embed", "qkv")),
+            "w_o": ParamSpec((H * Dh, d), ("qkv", "embed"), "out_proj")}
+
+
+def qkv_project(cfg, p, x):
+    B, S, _ = x.shape
+    H, Hkv, Dh = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    qkv = x @ p["w_qkv"]
+    q = qkv[..., : H * Dh].reshape(B, S, H, Dh)
+    k = qkv[..., H * Dh: (H + Hkv) * Dh].reshape(B, S, Hkv, Dh)
+    v = qkv[..., (H + Hkv) * Dh:].reshape(B, S, Hkv, Dh)
+    return q, k, v
+
+
+def _gqa_scores(q, k):
+    """q: (B,Sq,H,D), k: (B,Sk,Hkv,D) -> scores (B,Hkv,rep,Sq,Sk) fp32."""
+    B, Sq, H, D = q.shape
+    Hkv = k.shape[2]
+    rep = H // Hkv
+    qg = q.reshape(B, Sq, Hkv, rep, D)
+    s = jnp.einsum("bqhrd,bkhd->bhrqk", qg, k, preferred_element_type=jnp.float32)
+    return s * (1.0 / math.sqrt(D))
+
+
+def _gqa_out(w, v):
+    """w: (B,Hkv,rep,Sq,Sk) fp32, v: (B,Sk,Hkv,D) -> (B,Sq,H,D)."""
+    B, Hkv, rep, Sq, Sk = w.shape
+    o = jnp.einsum("bhrqk,bkhd->bqhrd", w.astype(v.dtype), v)
+    return o.reshape(B, Sq, Hkv * rep, v.shape[-1])
+
+
+def blockwise_attention(q, k, v, *, causal=True, q_offset=0,
+                        chunk_q=1024, chunk_k=1024):
+    """Flash-style attention in jnp: scan over KV chunks with running
+    (max, sum, acc); never materializes (Sq, Sk)."""
+    B, Sq, H, D = q.shape
+    Sk = k.shape[1]
+    Hkv = k.shape[2]
+    Dv = v.shape[-1]
+    rep = H // Hkv
+    cq, ck = min(chunk_q, Sq), min(chunk_k, Sk)
+    assert Sq % cq == 0 and Sk % ck == 0, (Sq, cq, Sk, ck)
+    nq, nk = Sq // cq, Sk // ck
+
+    qc = q.reshape(B, nq, cq, H, D)
+    kc = k.reshape(B, nk, ck, Hkv, D)
+    vc = v.reshape(B, nk, ck, Hkv, Dv)
+    qpos = q_offset + jnp.arange(Sq).reshape(nq, cq)
+
+    def kv_step(carry, ik):
+        m, l, acc = carry                      # (B,Hkv,rep,nq,cq) fp32 / acc (+D)
+        kb = jax.lax.dynamic_index_in_dim(kc, ik, 1, keepdims=False)
+        vb = jax.lax.dynamic_index_in_dim(vc, ik, 1, keepdims=False)
+        kpos = ik * ck + jnp.arange(ck)
+        # scores for every q chunk at once: (B,Hkv,rep,nq,cq,ck)
+        qg = qc.reshape(B, nq, cq, Hkv, rep, D)
+        s = jnp.einsum("bnqhrd,bkhd->bhrnqk", qg, kb,
+                       preferred_element_type=jnp.float32) / math.sqrt(D)
+        if causal:
+            mask = qpos[:, :, None] >= kpos[None, None, :]     # (nq,cq,ck)
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        scale = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_new = l * scale + p.sum(axis=-1)
+        pv = jnp.einsum("bhrnqk,bkhd->bhrnqd", p.astype(vb.dtype), vb)
+        acc_new = acc * scale[..., None].astype(acc.dtype) + pv.astype(acc.dtype)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, Hkv, rep, nq, cq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Hkv, rep, nq, cq), jnp.float32)
+    a0 = jnp.zeros((B, Hkv, rep, nq, cq, Dv), jnp.float32)
+    (m, l, acc), _ = maybe_scan(kv_step, (m0, l0, a0), jnp.arange(nk))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    # (B,Hkv,rep,nq,cq,Dv) -> (B,Sq,H,Dv)
+    out = out.transpose(0, 3, 4, 1, 2, 5).reshape(B, Sq, H, Dv)
+    return out.astype(q.dtype)
+
+
+def local_attention(q, k, v, window: int, *, q_offset=0):
+    """Sliding-window causal attention, banded blockwise: q chunk i attends
+    kv chunks {i-1, i} with chunk size == window.  O(S·2W·D) flops."""
+    B, S, H, D = q.shape
+    Hkv = k.shape[2]
+    rep = H // Hkv
+    W = min(window, S)
+    pad = (-S) % W
+    if pad:
+        zq = jnp.zeros((B, pad, H, D), q.dtype)
+        zk = jnp.zeros((B, pad, Hkv, D), k.dtype)
+        q = jnp.concatenate([q, zq], 1)
+        k = jnp.concatenate([k, zk], 1)
+        v = jnp.concatenate([v, zk], 1)
+    Sp = q.shape[1]
+    n = Sp // W
+    qc = q.reshape(B, n, W, H, D)
+    kc = k.reshape(B, n, W, Hkv, D)
+    vc = v.reshape(B, n, W, Hkv, D)
+    k_prev = jnp.concatenate([jnp.zeros_like(kc[:, :1]), kc[:, :-1]], 1)
+    v_prev = jnp.concatenate([jnp.zeros_like(vc[:, :1]), vc[:, :-1]], 1)
+    kk = jnp.concatenate([k_prev, kc], 2)          # (B,n,2W,Hkv,D)
+    vv = jnp.concatenate([v_prev, vc], 2)
+    qg = qc.reshape(B, n, W, Hkv, rep, D)
+    s = jnp.einsum("bnqhrd,bnkhd->bnhrqk", qg, kk,
+                   preferred_element_type=jnp.float32) / math.sqrt(D)
+    # band mask: key j (global idx in window coords) valid iff
+    #   q_idx - W < j_rel - W <= q_idx  =>  causal within [q-W+1 .. q]
+    qi = jnp.arange(W)[:, None]
+    kj = jnp.arange(2 * W)[None, :] - W            # relative to chunk start
+    mask = (kj <= qi) & (kj > qi - W)
+    first = jnp.arange(n) == 0                     # chunk 0 has no prev chunk
+    mask_first = mask & (kj[None] >= 0)
+    full_mask = jnp.where(first[:, None, None], mask_first, mask[None])
+    s = jnp.where(full_mask[None, :, None, None], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bnhrqk,bnkhd->bnqhrd", w.astype(vv.dtype), vv)
+    o = o.reshape(B, Sp, H, D)[:, :S]
+    return o.astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, cur_len, *, window: Optional[int] = None):
+    """Single-token decode vs a (possibly ring-buffer) cache.
+
+    q: (B,1,H,D); k_cache/v_cache: (B,Smax,Hkv,D); cur_len: () int32 — number
+    of valid tokens (for ring buffers: min(pos, W) handled by caller masks).
+    """
+    B, _, H, D = q.shape
+    Smax, Hkv = k_cache.shape[1], k_cache.shape[2]
+    rep = H // Hkv
+    qg = q.reshape(B, Hkv, rep, D)
+    s = jnp.einsum("bhrd,bkhd->bhrk", qg, k_cache,
+                   preferred_element_type=jnp.float32) / math.sqrt(D)
+    valid = jnp.arange(Smax)[None, None, None, :] < cur_len
+    s = jnp.where(valid, s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhrk,bkhd->bhrd", w.astype(v_cache.dtype), v_cache)
+    return o.reshape(B, 1, H, D).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / heads
+# ---------------------------------------------------------------------------
+def embed_spec(cfg) -> dict:
+    return {"embedding": ParamSpec((cfg.vocab_size, cfg.d_model),
+                                   ("vocab", "embed"), "embed")}
+
+
+def embed(p, tokens, d_model: int):
+    x = jnp.take(p["embedding"], tokens, axis=0)
+    return x * math.sqrt(d_model)
+
+
+def embed_onehot(p, tokens, d_model: int):
+    """Decode-path embedding lookup as one_hot @ table: with the table
+    vocab-sharded, the contraction runs shard-local and the partitioner
+    psums a (B, d) result (~MBs) instead of all-gathering the table
+    (82 MB/chip/step at 256k vocab) — §Perf iteration 7.  Only used for
+    single-token decode (one_hot of (B,) is cheap; never for (B,S) train)."""
+    emb = p["embedding"]
+    oh = jax.nn.one_hot(tokens, emb.shape[0], dtype=emb.dtype)
+    return (oh @ emb) * math.sqrt(d_model)
+
+
+def unembed(p, x, softcap: float = 0.0):
+    logits = jnp.einsum("bsd,vd->bsv", x, p["embedding"],
+                        preferred_element_type=jnp.float32)
+    if softcap:
+        logits = jnp.tanh(logits / softcap) * softcap
+    return logits
+
+
+def cross_entropy(logits, labels, mask=None, z_loss: float = 1e-4):
+    """Mean token CE (fp32) with optional z-loss; labels<0 are ignored."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None].clip(0), axis=-1)[..., 0]
+    nll = lse - ll
+    if z_loss:
+        nll = nll + z_loss * jnp.square(lse)
+    valid = labels >= 0
+    if mask is not None:
+        valid = valid & mask
+    denom = jnp.maximum(valid.sum(), 1)
+    return jnp.where(valid, nll, 0.0).sum() / denom

@@ -1,0 +1,119 @@
+"""Griffin recurrent block: fused input projections + causal depthwise conv +
+RG-LRU gated linear recurrence (arXiv:2402.19427).
+
+TPU adaptation of the recurrence: a first-order diagonal linear recurrence
+h_t = a_t * h_{t-1} + b_t is evaluated with ``jax.lax.associative_scan``
+(O(log S) depth — the Blelloch scan maps well onto the VPU), instead of the
+sequential CUDA scan the reference GPU implementation uses.  Decode is the
+O(1) single-step update.
+
+The two input projections (gate branch + recurrent branch) are emitted as ONE
+fused (d, 2·lru) matmul — the shared-input horizontal-fusion case.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.base import ParamSpec
+
+C_EXP = 8.0  # RG-LRU exponent constant
+
+
+def spec(cfg) -> dict:
+    d = cfg.d_model
+    w = cfg.lru_width or d
+    H = cfg.num_heads
+    bd = w // H                      # block-diagonal gate blocks (per head)
+    return {
+        "w_in": ParamSpec((d, 2 * w), ("embed", "ffn")),      # [gate | recurrent]
+        "conv_w": ParamSpec((cfg.conv1d_width, w), (None, "lru")),
+        "conv_b": ParamSpec((w,), ("lru",), "zeros"),
+        "gate_a": ParamSpec((H, bd, bd), (None, "lru", None)),
+        "gate_a_b": ParamSpec((w,), ("lru",), "zeros"),
+        "gate_x": ParamSpec((H, bd, bd), (None, "lru", None)),
+        "gate_x_b": ParamSpec((w,), ("lru",), "zeros"),
+        "lam": ParamSpec((w,), ("lru",), "ones", dtype="float32"),
+        "w_out": ParamSpec((w, d), ("ffn", "embed"), "out_proj"),
+    }
+
+
+def _block_diag(x, w, b):
+    """x: (..., W) with W = H*bd; w: (H, bd, bd) -> (..., W)."""
+    H, bd, _ = w.shape
+    xh = x.reshape(x.shape[:-1] + (H, bd))
+    y = jnp.einsum("...hi,hij->...hj", xh, w)
+    return y.reshape(x.shape) + b
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv.  x: (B,S,W), w: (K,W)."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    y = sum(xp[:, i: i + x.shape[1], :] * w[i] for i in range(K))
+    return y + b
+
+
+def _gates(p, rec):
+    """RG-LRU gate math. rec: (B,S,W) -> (log_a fp32, gated_in fp32)."""
+    r = jax.nn.sigmoid(_block_diag(rec, p["gate_a"], p["gate_a_b"]).astype(jnp.float32))
+    i = jax.nn.sigmoid(_block_diag(rec, p["gate_x"], p["gate_x_b"]).astype(jnp.float32))
+    # a = sigmoid(lam) ** (c*r)  =>  log_a = -c * r * softplus(-lam)
+    log_a = -C_EXP * r * jax.nn.softplus(-p["lam"])
+    a2 = jnp.exp(2.0 * log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a2, 1e-6)) * (i * rec.astype(jnp.float32))
+    return log_a, gated
+
+
+def rg_lru_scan(p, rec, h0=None):
+    """Full-sequence RG-LRU via associative scan.
+    rec: (B,S,W); h0: (B,W) initial state -> (y (B,S,W), h_last (B,W))."""
+    log_a, b = _gates(p, rec)
+    a = jnp.exp(log_a)
+    if h0 is not None:
+        # fold initial state into the first step: b_0 += a_0 * h0
+        b = b.at[:, 0, :].add(a[:, 0, :] * h0.astype(jnp.float32))
+
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a2 * a1, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h.astype(rec.dtype), h[:, -1, :]
+
+
+def rg_lru_step(p, rec_t, h_prev):
+    """Single decode step. rec_t: (B,W); h_prev: (B,W) fp32."""
+    log_a, b = _gates(p, rec_t[:, None, :])
+    h = jnp.exp(log_a[:, 0]) * h_prev + b[:, 0]
+    return h.astype(rec_t.dtype), h
+
+
+def apply_train(cfg, p, x, h0=None, conv0=None):
+    """Full block, full sequence.  x: (B,S,d).
+    Returns (y, (h_last, conv_tail)) for cache handoff at prefill."""
+    gate_in, rec_in = jnp.split(x @ p["w_in"], 2, axis=-1)
+    gate = jax.nn.gelu(gate_in)
+    if conv0 is not None:
+        rec_cat = jnp.concatenate([conv0.astype(rec_in.dtype), rec_in], axis=1)
+        rec = _causal_conv(rec_cat, p["conv_w"], p["conv_b"])[:, conv0.shape[1]:]
+    else:
+        rec = _causal_conv(rec_in, p["conv_w"], p["conv_b"])
+    y, h_last = rg_lru_scan(p, rec, h0)
+    K = cfg.conv1d_width
+    conv_tail = rec_in[:, -(K - 1):, :] if rec_in.shape[1] >= K - 1 else rec_in
+    return (y * gate) @ p["w_out"], (h_last, conv_tail)
+
+
+def apply_decode(cfg, p, x_t, h_prev, conv_buf):
+    """One step.  x_t: (B,1,d); h_prev: (B,W) fp32; conv_buf: (B,K-1,W)."""
+    gate_in, rec_in = jnp.split(x_t @ p["w_in"], 2, axis=-1)
+    gate = jax.nn.gelu(gate_in[:, 0])
+    K = cfg.conv1d_width
+    window = jnp.concatenate([conv_buf.astype(rec_in.dtype), rec_in], axis=1)  # (B,K,W)
+    rec_t = jnp.einsum("bkw,kw->bw", window, p["conv_w"]) + p["conv_b"]
+    y_t, h_new = rg_lru_step(p, rec_t, h_prev)
+    new_buf = window[:, 1:, :].astype(conv_buf.dtype)
+    out = ((y_t * gate) @ p["w_out"])[:, None, :]
+    return out, h_new, new_buf

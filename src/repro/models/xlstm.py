@@ -1,0 +1,316 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory, parallelizable) and
+sLSTM (scalar memory, strictly sequential).
+
+TPU adaptation: the mLSTM is evaluated in *chunkwise* form for train/prefill —
+within a chunk the gated outer-product recurrence is expressed as masked
+matmuls (MXU-friendly), across chunks a lax.scan carries the (C, n, m)
+stabilized state.  This matches the sequential recurrence exactly
+(tests/test_models_xlstm.py checks chunked == sequential).  Decode is the
+O(1) recurrent step — which is why this arch runs the 500k-context shape.
+
+The sLSTM's pointwise recurrent chain is the paper's "memory-intensive
+kernel" archetype: long dependent chains of cheap VPU ops — prime fodder for
+horizontal fusion with compute-bound neighbours (DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.base import ParamSpec
+from repro.runtime_flags import maybe_scan
+from repro.models.rglru import _causal_conv
+
+NEG = -1e30
+
+
+# ===========================================================================
+# mLSTM
+# ===========================================================================
+def mlstm_spec(cfg) -> dict:
+    d = cfg.d_model
+    f = int(cfg.mlstm_proj_factor * d)
+    qk = f // 2
+    H = cfg.num_heads
+    return {
+        "w_up": ParamSpec((d, 2 * f), ("embed", "ffn")),         # [x_m | z-gate]
+        "conv_w": ParamSpec((cfg.conv1d_width, f), (None, "ffn")),
+        "conv_b": ParamSpec((f,), ("ffn",), "zeros"),
+        "w_q": ParamSpec((f, qk), ("ffn", "qkv")),
+        "w_k": ParamSpec((f, qk), ("ffn", "qkv")),
+        "w_v": ParamSpec((f, f), ("ffn", "qkv")),
+        "w_gates": ParamSpec((f, 2 * H), ("ffn", None)),          # [ĩ | f̃] per head
+        "gate_b": ParamSpec((2 * H,), (None,), "zeros", dtype="float32"),
+        "out_norm": ParamSpec((f,), ("ffn",), "zeros", dtype="float32"),
+        "w_down": ParamSpec((f, d), ("ffn", "embed"), "out_proj"),
+    }
+
+
+def mlstm_dims(cfg):
+    d = cfg.d_model
+    f = int(cfg.mlstm_proj_factor * d)
+    H = cfg.num_heads
+    return f, f // 2, H, (f // 2) // H, f // H      # f, qk, H, dk, dv
+
+
+def _headnorm(scale, x):
+    """Per-head RMS norm over the last dim, then learned scale over flat dim.
+    x: (B, S, H, dv) -> (B, S, H*dv)."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + 1e-6)
+    y = y.reshape(y.shape[:-2] + (-1,)) * (1.0 + scale)
+    return y
+
+
+def mlstm_seq(q, k, v, i_pre, f_pre, state):
+    """Sequential reference recurrence (oracle; also usable for decode S=1).
+
+    q,k: (B,S,H,dk); v: (B,S,H,dv); gates (B,S,H).  fp32 state
+    (C (B,H,dk,dv), n (B,H,dk), m (B,H)).
+    """
+    B, S, H, dk = q.shape
+    scale = 1.0 / math.sqrt(dk)
+
+    def step(carry, xs):
+        C, n, m = carry
+        qt, kt, vt, it, ft = xs                       # (B,H,dk) ... (B,H)
+        logf = jax.nn.log_sigmoid(ft)
+        m_new = jnp.maximum(logf + m, it)
+        fw = jnp.exp(logf + m - m_new)[..., None]
+        iw = jnp.exp(it - m_new)[..., None]
+        C = C * fw[..., None] + iw[..., None] * (kt[..., :, None] * vt[..., None, :])
+        n = n * fw + iw * kt
+        qs = qt * scale
+        num = jnp.einsum("bhd,bhdv->bhv", qs, C)
+        qn = jnp.abs(jnp.einsum("bhd,bhd->bh", qs, n))
+        h = num / jnp.maximum(qn, jnp.exp(-m_new))[..., None]
+        return (C, n, m_new), h
+
+    xs = (q.transpose(1, 0, 2, 3).astype(jnp.float32),
+          k.transpose(1, 0, 2, 3).astype(jnp.float32),
+          v.transpose(1, 0, 2, 3).astype(jnp.float32),
+          i_pre.transpose(1, 0, 2).astype(jnp.float32),
+          f_pre.transpose(1, 0, 2).astype(jnp.float32))
+    state, hs = jax.lax.scan(step, state, xs)
+    return hs.transpose(1, 0, 2, 3), state            # (B,S,H,dv)
+
+
+def mlstm_chunked(q, k, v, i_pre, f_pre, state, chunk: int = 256):
+    """Chunkwise-parallel stabilized mLSTM — same math as mlstm_seq.
+
+    Within-chunk: masked-matmul form (MXU).  Across chunks: scan on
+    stabilized (C, n, m).
+    """
+    B, S, H, dk = q.shape
+    dv = v.shape[-1]
+    L = min(chunk, S)
+    assert S % L == 0, (S, L)
+    nc = S // L
+    scale = 1.0 / math.sqrt(dk)
+
+    def cview(x, dlast):
+        # (B,S,H,d) -> (nc, B, H, L, d) for scan
+        return (x.reshape(B, nc, L, H, dlast).transpose(1, 0, 3, 2, 4)
+                .astype(jnp.float32))
+
+    qs = cview(q, dk) * scale
+    ks = cview(k, dk)
+    vs = cview(v, dv)
+    gi = i_pre.reshape(B, nc, L, H).transpose(1, 0, 3, 2).astype(jnp.float32)
+    gf = jax.nn.log_sigmoid(
+        f_pre.reshape(B, nc, L, H).transpose(1, 0, 3, 2).astype(jnp.float32))
+
+    causal = jnp.tril(jnp.ones((L, L), bool))
+
+    def step(carry, xs):
+        C0, n0, m0 = carry                            # fp32
+        qb, kb, vb, ib, fb = xs                       # (B,H,L,·) / (B,H,L)
+        b = jnp.cumsum(fb, axis=-1)
+        u = ib - b
+        m_i = jnp.maximum(m0[..., None] + b, b + jax.lax.cummax(u, axis=2))
+        # D_ij = exp(b_i - m_i + u_j) for j <= i
+        D = jnp.exp(b[..., :, None] - m_i[..., :, None] + u[..., None, :])
+        D = jnp.where(causal[None, None], D, 0.0)
+        s = jnp.einsum("bhid,bhjd->bhij", qb, kb) * D
+        inter_w = jnp.exp(b + m0[..., None] - m_i)    # (B,H,L)
+        num = (jnp.einsum("bhij,bhjv->bhiv", s, vb)
+               + jnp.einsum("bhid,bhdv->bhiv", qb, C0) * inter_w[..., None])
+        qn = s.sum(-1) + jnp.einsum("bhid,bhd->bhi", qb, n0) * inter_w
+        h = num / jnp.maximum(jnp.abs(qn), jnp.exp(-m_i))[..., None]
+        # chunk-end state
+        bL = b[..., -1:]
+        mL = m_i[..., -1]
+        w = jnp.exp(bL - mL[..., None] + u)           # (B,H,L)
+        decay = jnp.exp(bL[..., 0] + m0 - mL)
+        C1 = C0 * decay[..., None, None] + jnp.einsum("bhj,bhjd,bhjv->bhdv",
+                                                      w, kb, vb)
+        n1 = n0 * decay[..., None] + jnp.einsum("bhj,bhjd->bhd", w, kb)
+        return (C1, n1, mL), h
+
+    state, hs = maybe_scan(step, state, (qs, ks, vs, gi, gf))
+    # (nc,B,H,L,dv) -> (B,S,H,dv)
+    hs = hs.transpose(1, 0, 3, 2, 4).reshape(B, S, H, dv)
+    return hs, state
+
+
+def mlstm_fresh_state(B, H, dk, dv):
+    return (jnp.zeros((B, H, dk, dv), jnp.float32),
+            jnp.zeros((B, H, dk), jnp.float32),
+            jnp.full((B, H), NEG, jnp.float32))
+
+
+def _mlstm_qkvg(cfg, p, x, conv0=None):
+    f, qk, H, dk, dv = mlstm_dims(cfg)
+    B, S, _ = x.shape
+    xm, z = jnp.split(x @ p["w_up"], 2, axis=-1)
+    if conv0 is not None:
+        cat = jnp.concatenate([conv0.astype(xm.dtype), xm], axis=1)
+        c = _causal_conv(cat, p["conv_w"], p["conv_b"])[:, conv0.shape[1]:]
+    else:
+        c = _causal_conv(xm, p["conv_w"], p["conv_b"])
+    c = jax.nn.silu(c)
+    q = (c @ p["w_q"]).reshape(B, S, H, dk)
+    k = (c @ p["w_k"]).reshape(B, S, H, dk)
+    v = (xm @ p["w_v"]).reshape(B, S, H, dv)
+    gates = (xm @ p["w_gates"]).astype(jnp.float32) + p["gate_b"]
+    i_pre, f_pre = gates[..., :H], gates[..., H:]
+    K = cfg.conv1d_width
+    conv_tail = xm[:, -(K - 1):, :]
+    return q, k, v, i_pre, f_pre, z, conv_tail
+
+
+def mlstm_apply_train(cfg, p, x, state=None, conv0=None):
+    """x: (B,S,d) -> (y, (state, conv_tail))."""
+    f, qk, H, dk, dv = mlstm_dims(cfg)
+    B, S, _ = x.shape
+    q, k, v, i_pre, f_pre, z, conv_tail = _mlstm_qkvg(cfg, p, x, conv0)
+    if state is None:
+        state = mlstm_fresh_state(B, H, dk, dv)
+    # pad S to a chunk multiple if needed (smoke sizes)
+    chunk = 256 if S % 256 == 0 else S
+    h, state = mlstm_chunked(q, k, v, i_pre, f_pre, state, chunk=chunk)
+    y = _headnorm(p["out_norm"], h).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    return y @ p["w_down"], (state, conv_tail)
+
+
+def mlstm_apply_decode(cfg, p, x_t, state, conv_buf):
+    """x_t: (B,1,d); conv_buf: (B,K-1,f)."""
+    f, qk, H, dk, dv = mlstm_dims(cfg)
+    B = x_t.shape[0]
+    xm, z = jnp.split(x_t @ p["w_up"], 2, axis=-1)
+    window = jnp.concatenate([conv_buf.astype(xm.dtype), xm], axis=1)
+    c = jax.nn.silu(jnp.einsum("bkf,kf->bf", window, p["conv_w"]) + p["conv_b"])
+    q = (c @ p["w_q"]).reshape(B, 1, H, dk)
+    k = (c @ p["w_k"]).reshape(B, 1, H, dk)
+    v = (xm[:, 0] @ p["w_v"]).reshape(B, 1, H, dv)
+    gates = (xm[:, 0] @ p["w_gates"]).astype(jnp.float32) + p["gate_b"]
+    h, state = mlstm_seq(q, k, v, gates[:, None, :H], gates[:, None, H:], state)
+    y = _headnorm(p["out_norm"], h).astype(x_t.dtype)
+    y = y * jax.nn.silu(z)
+    return y @ p["w_down"], state, window[:, 1:, :].astype(conv_buf.dtype)
+
+
+# ===========================================================================
+# sLSTM
+# ===========================================================================
+def slstm_spec(cfg) -> dict:
+    d = cfg.d_model
+    H = cfg.num_heads
+    dh = d // H
+    fs = int(cfg.slstm_proj_factor * d)
+    return {
+        "conv_w": ParamSpec((cfg.conv1d_width, d), (None, "embed")),
+        "conv_b": ParamSpec((d,), ("embed",), "zeros"),
+        # §Perf iteration 2: the sLSTM recurrence stays UNsharded on the
+        # model axis — its per-step block-diag contraction would psum (B,d)
+        # every timestep (S=4096 psums/layer under TP); its flops are <5% of
+        # any cell, so replicated compute beats per-step collectives.
+        "w_zifo": ParamSpec((d, 4 * d), ("embed", None)),
+        "r_zifo": ParamSpec((4, H, dh, dh), (None, None, None, None)),
+        "b_zifo": ParamSpec((4 * d,), (None,), "zeros", dtype="float32"),
+        "out_norm": ParamSpec((d,), ("embed",), "zeros", dtype="float32"),
+        "w_up": ParamSpec((d, 2 * fs), ("embed", "ffn")),
+        "w_down": ParamSpec((fs, d), ("ffn", "embed"), "out_proj"),
+    }
+
+
+def _slstm_cell(p, wx_t, state):
+    """One recurrence step.  wx_t: (B, 4d) fp32 precomputed W@x + b;
+    state = (c, n, m, h) each (B, d) fp32."""
+    c, n, m, h = state
+    H, dh, _ = p["r_zifo"].shape[1:]
+    d = c.shape[-1]
+    hh = h.reshape(-1, H, dh)
+    r = jnp.einsum("bhi,ghij->gbhj", hh, p["r_zifo"].astype(jnp.float32))
+    r = r.reshape(4, -1, d)
+    z_pre, i_pre, f_pre, o_pre = [wx_t[..., j * d:(j + 1) * d] + r[j]
+                                  for j in range(4)]
+    z = jnp.tanh(z_pre)
+    o = jax.nn.sigmoid(o_pre)
+    logf = jax.nn.log_sigmoid(f_pre)
+    m_new = jnp.maximum(logf + m, i_pre)
+    fw = jnp.exp(logf + m - m_new)
+    iw = jnp.exp(i_pre - m_new)
+    c_new = fw * c + iw * z
+    n_new = fw * n + iw
+    h_new = o * c_new / jnp.maximum(n_new, 1e-6)
+    return (c_new, n_new, m_new, h_new), h_new
+
+
+def slstm_fresh_state(B, d):
+    z = jnp.zeros((B, d), jnp.float32)
+    return (z, z, jnp.full((B, d), NEG, jnp.float32), z)
+
+
+def slstm_apply_train(cfg, p, x, state=None, conv0=None):
+    """x: (B,S,d) — sequential lax.scan over time."""
+    B, S, d = x.shape
+    if conv0 is not None:
+        cat = jnp.concatenate([conv0.astype(x.dtype), x], axis=1)
+        c = _causal_conv(cat, p["conv_w"], p["conv_b"])[:, conv0.shape[1]:]
+    else:
+        c = _causal_conv(x, p["conv_w"], p["conv_b"])
+    c = jax.nn.silu(c)
+    # i,f gates see the conv features; z,o see the raw input (official layout)
+    wz = x @ p["w_zifo"][:, : d]
+    wi = c @ p["w_zifo"][:, d: 2 * d]
+    wf = c @ p["w_zifo"][:, 2 * d: 3 * d]
+    wo = x @ p["w_zifo"][:, 3 * d:]
+    wx = jnp.concatenate([wz, wi, wf, wo], axis=-1).astype(jnp.float32) \
+        + p["b_zifo"]
+    if state is None:
+        state = slstm_fresh_state(B, d)
+    state, hs = jax.lax.scan(lambda s, w: _slstm_cell(p, w, s), state,
+                             wx.transpose(1, 0, 2))
+    h = hs.transpose(1, 0, 2)                              # (B,S,d) fp32
+    # per-head norm + gated FFN
+    H = cfg.num_heads
+    y = _headnorm(p["out_norm"], h.reshape(B, S, H, d // H)).astype(x.dtype)
+    up = y @ p["w_up"]
+    g, u = jnp.split(up, 2, axis=-1)
+    y = (jax.nn.silu(g) * u) @ p["w_down"]
+    K = cfg.conv1d_width
+    conv_tail = x[:, -(K - 1):, :]
+    return y, (state, conv_tail)
+
+
+def slstm_apply_decode(cfg, p, x_t, state, conv_buf):
+    """x_t: (B,1,d)."""
+    B, _, d = x_t.shape
+    window = jnp.concatenate([conv_buf.astype(x_t.dtype), x_t], axis=1)
+    c = jax.nn.silu(jnp.einsum("bkd,kd->bd", window, p["conv_w"]) + p["conv_b"])
+    x0 = x_t[:, 0]
+    wx = jnp.concatenate(
+        [x0 @ p["w_zifo"][:, :d], c @ p["w_zifo"][:, d:2 * d],
+         c @ p["w_zifo"][:, 2 * d:3 * d], x0 @ p["w_zifo"][:, 3 * d:]],
+        axis=-1).astype(jnp.float32) + p["b_zifo"]
+    state, h = _slstm_cell(p, wx, state)
+    H = cfg.num_heads
+    y = _headnorm(p["out_norm"], h.reshape(B, 1, H, d // H)).astype(x_t.dtype)
+    g, u = jnp.split(y @ p["w_up"], 2, axis=-1)
+    y = (jax.nn.silu(g) * u) @ p["w_down"]
+    return y, state, window[:, 1:, :].astype(conv_buf.dtype)

@@ -1,0 +1,37 @@
+"""Global runtime flags.
+
+UNROLL_SCANS — when True, layer stacks / attention KV loops / mLSTM chunk
+loops run as unrolled Python loops instead of lax.scan.  Used by the dry-run:
+XLA's HLO cost analysis counts a `while` body ONCE (it has no trip-count
+model), so scanned programs undercount FLOPs/bytes/collective-bytes by the
+trip count.  Unrolled lowering costs compile time but yields exact
+whole-program cost_analysis numbers for §Roofline.
+
+Strictly-sequential recurrences (sLSTM over S=4096 steps) are never unrolled;
+their contribution is analytically small (<5% of any assigned cell) and the
+undercount is documented in EXPERIMENTS.md §Methodology.
+"""
+UNROLL_SCANS = False
+
+
+def maybe_scan(body, carry, xs, length=None):
+    """lax.scan, or an unrolled Python loop when UNROLL_SCANS is set.
+
+    body(carry, x) -> (carry, y).  xs: pytree with leading axis, or None.
+    Returns (carry, ys) with ys stacked (or None if all ys are None).
+    """
+    import jax
+    import jax.numpy as jnp
+
+    if not UNROLL_SCANS:
+        return jax.lax.scan(body, carry, xs, length=length)
+
+    n = length if xs is None else jax.tree.leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(n):
+        x = None if xs is None else jax.tree.map(lambda a: a[i], xs)
+        carry, y = body(carry, x)
+        ys.append(y)
+    if all(y is None for y in ys):
+        return carry, None
+    return carry, jax.tree.map(lambda *zs: jnp.stack(zs), *ys)

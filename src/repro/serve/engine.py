@@ -1,0 +1,106 @@
+"""Batched serving engine (iteration-level batching with refill).
+
+Semantics: up to ``batch`` requests run in lock-step — prompts are
+right-aligned/padded, prefilled with the batched ``lm.prefill``, then decoded
+together; finished sequences are masked out and the batch refills at the next
+wavefront.  Per-slot-position continuous batching would need a vectorized
+cache position (B,) — noted as an extension in DESIGN.md; iteration-level
+batching is what the assigned decode shapes (uniform context length) model.
+
+On the production mesh the cache is sequence-sharded and decode attention is
+the distributed flash-decode (DESIGN.md §7).  ``examples/dual_stream_decode.py``
+shows the horizontal-fusion dual-stream variant of the decode step.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import lm
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                 # (S,) int32
+    max_new_tokens: int = 32
+    temperature: float = 0.0
+    eos_token: Optional[int] = None
+    out_tokens: list = field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params, *, batch: int = 8,
+                 max_len: int = 512, rng_seed: int = 0):
+        self.cfg = cfg
+        self.params = params
+        self.batch = batch
+        self.max_len = max_len
+        self.rng = jax.random.PRNGKey(rng_seed)
+        self._decode = jax.jit(
+            lambda p, c, t: lm.decode_step(cfg, p, c, t))
+        self._prefill = jax.jit(
+            lambda p, b: lm.prefill(cfg, p, b, max_len=self.max_len))
+
+    # ------------------------------------------------------------------
+    def _prefill_wave(self, wave: list[Request]):
+        """Waves are grouped by prompt length (see run()); empty slots
+        duplicate row 0 and are ignored."""
+        S = len(wave[0].prompt)
+        toks = np.zeros((self.batch, S), np.int32)
+        for i, r in enumerate(wave):
+            toks[i] = r.prompt
+        cache, last_logits = self._prefill(self.params, {"tokens": jnp.asarray(toks)})
+        return cache, last_logits
+
+    def _sample(self, logits: np.ndarray, req: Request) -> int:
+        if req.temperature > 0:
+            self.rng, sub = jax.random.split(self.rng)
+            return int(jax.random.categorical(
+                sub, jnp.asarray(logits) / req.temperature))
+        return int(logits.argmax())
+
+    # ------------------------------------------------------------------
+    def run(self, requests: list[Request]) -> list[Request]:
+        # group by prompt length: one wave = one (length, <=batch) group
+        by_len: dict[int, list[Request]] = {}
+        for r in requests:
+            by_len.setdefault(len(r.prompt), []).append(r)
+        pending: list[list[Request]] = []
+        for _, group in sorted(by_len.items()):
+            for i in range(0, len(group), self.batch):
+                pending.append(group[i: i + self.batch])
+        while pending:
+            wave = pending.pop(0)
+            cache, last_logits = self._prefill_wave(wave)
+            logits = np.asarray(last_logits, np.float32)
+            for i, r in enumerate(wave):
+                r.out_tokens.append(self._sample(logits[i], r))
+            budget = max(r.max_new_tokens for r in wave)
+            for _ in range(budget - 1):
+                if all(r.done or len(r.out_tokens) >= r.max_new_tokens
+                       for r in wave):
+                    break
+                toks = np.zeros((self.batch,), np.int32)
+                for i, r in enumerate(wave):
+                    toks[i] = r.out_tokens[-1]
+                out, cache = self._decode(self.params, cache,
+                                          jnp.asarray(toks))
+                logits = np.asarray(out, np.float32)
+                for i, r in enumerate(wave):
+                    if r.done or len(r.out_tokens) >= r.max_new_tokens:
+                        continue
+                    tok = self._sample(logits[i], r)
+                    r.out_tokens.append(tok)
+                    if r.eos_token is not None and tok == r.eos_token:
+                        r.done = True
+            for r in wave:
+                r.done = True
+        return requests

@@ -1,0 +1,179 @@
+"""Fault-tolerant checkpointing.
+
+  * atomic       — write to ``<step>.tmp-<nonce>`` then rename; a crash never
+                   leaves a half-valid checkpoint visible.
+  * verified     — manifest carries per-leaf byte sizes + a digest; restore
+                   validates before trusting a directory.
+  * async        — ``save_async`` snapshots to host memory (device_get) and
+                   writes on a worker thread: training continues while bytes
+                   hit disk (the I/O leaves the step critical path).
+  * elastic      — leaves are saved as full logical arrays; ``restore``
+                   re-lays them out onto ANY mesh via device_put with the
+                   target sharding (mesh A -> mesh B rescale works by
+                   construction).  At real 1000-node scale the same manifest
+                   format extends to per-shard files; the reshard path is
+                   identical.
+  * auto-resume  — ``latest_step``/``restore_latest`` pick the newest *valid*
+                   checkpoint, skipping corrupt/partial ones.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import shutil
+import threading
+import time
+from pathlib import Path
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _tree_flatten_with_paths(tree):
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in flat:
+        name = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path)
+        out.append((name, leaf))
+    return out
+
+
+def save(ckpt_dir: str | Path, step: int, tree: Any,
+         extra_metadata: Optional[dict] = None) -> Path:
+    """Synchronous atomic save.  Returns the final directory."""
+    ckpt_dir = Path(ckpt_dir)
+    ckpt_dir.mkdir(parents=True, exist_ok=True)
+    final = ckpt_dir / f"step_{step:010d}"
+    tmp = ckpt_dir / f".tmp-{step}-{os.getpid()}-{time.time_ns()}"
+    tmp.mkdir()
+    manifest = {"step": step, "leaves": {}, "metadata": extra_metadata or {}}
+    for name, leaf in _tree_flatten_with_paths(tree):
+        arr = np.asarray(jax.device_get(leaf))
+        fn = name.replace("/", "__") + ".bin"
+        # raw bytes + manifest dtype (np.save can't roundtrip bfloat16)
+        (tmp / fn).write_bytes(arr.tobytes())
+        manifest["leaves"][name] = {
+            "file": fn, "shape": list(arr.shape), "dtype": str(arr.dtype),
+            "bytes": int(arr.nbytes),
+        }
+    blob = json.dumps(manifest, sort_keys=True).encode()
+    manifest["digest"] = hashlib.sha256(blob).hexdigest()
+    (tmp / "manifest.json").write_text(json.dumps(manifest, indent=1))
+    if final.exists():
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    return final
+
+
+class AsyncCheckpointer:
+    """Snapshot on the caller thread (cheap host copy), write on a worker."""
+
+    def __init__(self, ckpt_dir: str | Path, keep: int = 3):
+        self.ckpt_dir = Path(ckpt_dir)
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    def save_async(self, step: int, tree: Any, extra_metadata=None):
+        self.wait()                       # one in flight at a time
+        snapshot = jax.tree.map(lambda l: np.asarray(jax.device_get(l)), tree)
+
+        def work():
+            try:
+                save(self.ckpt_dir, step, snapshot, extra_metadata)
+                self._gc()
+            except BaseException as e:    # surfaced on next wait()
+                self._error = e
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            e, self._error = self._error, None
+            raise e
+
+    def _gc(self):
+        steps = sorted(valid_steps(self.ckpt_dir))
+        for s in steps[: -self.keep]:
+            shutil.rmtree(self.ckpt_dir / f"step_{s:010d}", ignore_errors=True)
+
+
+def _valid(d: Path) -> bool:
+    mf = d / "manifest.json"
+    if not mf.exists():
+        return False
+    try:
+        manifest = json.loads(mf.read_text())
+        for name, info in manifest["leaves"].items():
+            f = d / info["file"]
+            if not f.exists() or f.stat().st_size < info["bytes"]:
+                return False
+        digest = manifest.pop("digest", None)
+        blob = json.dumps(manifest, sort_keys=True).encode()
+        return digest == hashlib.sha256(blob).hexdigest()
+    except Exception:
+        return False
+
+
+def valid_steps(ckpt_dir: str | Path) -> list[int]:
+    ckpt_dir = Path(ckpt_dir)
+    if not ckpt_dir.exists():
+        return []
+    out = []
+    for d in ckpt_dir.iterdir():
+        if d.name.startswith("step_") and _valid(d):
+            out.append(int(d.name.split("_")[1]))
+    return sorted(out)
+
+
+def latest_step(ckpt_dir: str | Path) -> Optional[int]:
+    steps = valid_steps(ckpt_dir)
+    return steps[-1] if steps else None
+
+
+def restore(ckpt_dir: str | Path, step: int, target_tree: Any,
+            shardings: Any = None) -> tuple[Any, dict]:
+    """Restore into the structure of ``target_tree``; optionally lay leaves
+    out with ``shardings`` (a matching pytree of NamedSharding) — this is the
+    elastic-rescale path: the saved mesh is irrelevant."""
+    d = Path(ckpt_dir) / f"step_{step:010d}"
+    manifest = json.loads((d / "manifest.json").read_text())
+    import jax.numpy as jnp
+    leaves = {}
+    for name, info in manifest["leaves"].items():
+        raw = (d / info["file"]).read_bytes()
+        dt = jnp.dtype(info["dtype"])             # handles bfloat16 etc.
+        leaves[name] = np.frombuffer(raw, dtype=dt).reshape(info["shape"])
+
+    named = _tree_flatten_with_paths(target_tree)
+    sh_named = (_tree_flatten_with_paths(shardings)
+                if shardings is not None else None)
+    treedef = jax.tree.structure(target_tree)
+    out = []
+    for i, (name, leaf) in enumerate(named):
+        if name not in leaves:
+            raise KeyError(f"checkpoint missing leaf {name!r}")
+        arr = leaves[name]
+        want = tuple(getattr(leaf, "shape", arr.shape))
+        if tuple(arr.shape) != want:
+            raise ValueError(f"{name}: shape {arr.shape} != {want}")
+        if sh_named is not None:
+            out.append(jax.device_put(arr, sh_named[i][1]))
+        else:
+            out.append(jax.numpy.asarray(arr))
+    return jax.tree.unflatten(treedef, out), manifest["metadata"]
+
+
+def restore_latest(ckpt_dir, target_tree, shardings=None):
+    step = latest_step(ckpt_dir)
+    if step is None:
+        return None
+    tree, meta = restore(ckpt_dir, step, target_tree, shardings)
+    return step, tree, meta

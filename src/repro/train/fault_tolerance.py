@@ -1,0 +1,120 @@
+"""Fault tolerance: straggler detection, heartbeats, restartable training.
+
+This container is a single process; the *mechanisms* are real and unit-tested
+with injected clocks/failures, and the multi-host wiring points (heartbeat
+transport, reschedule RPC) are narrow interfaces a cluster agent implements.
+
+  * StepWatchdog      — EWMA + k·σ step-time anomaly detector; flags
+                        stragglers and suggests mitigation (the data pipeline
+                        exposes skip_ahead(); persistent stragglers escalate
+                        to the HeartbeatMonitor as suspect hosts).
+  * HeartbeatMonitor  — per-host liveness with deadline; dead hosts trigger
+                        an elastic-rescale decision (new mesh shape), which
+                        checkpoint.restore executes by re-laying-out arrays.
+  * run_with_restarts — crash-looping driver: on failure, restore the latest
+                        valid checkpoint and continue; bounded retries.
+"""
+from __future__ import annotations
+
+import math
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+
+@dataclass
+class StepWatchdog:
+    """Flags steps slower than mean + k·σ (EWMA estimates)."""
+    k: float = 3.0
+    alpha: float = 0.1                 # EWMA decay
+    warmup: int = 5
+    mean: float = 0.0
+    var: float = 0.0
+    n: int = 0
+    stragglers: list = field(default_factory=list)
+
+    def observe(self, step: int, dt: float) -> bool:
+        """Returns True if this step is a straggler."""
+        self.n += 1
+        if self.n <= self.warmup:
+            # prime the estimators
+            self.mean = dt if self.n == 1 else \
+                self.mean + (dt - self.mean) / self.n
+            self.var = self.var + (dt - self.mean) ** 2 / max(self.n, 1)
+            return False
+        std = math.sqrt(max(self.var, 1e-12))
+        is_straggler = dt > self.mean + self.k * std
+        if is_straggler:
+            self.stragglers.append((step, dt))
+        else:
+            # only track healthy steps so stragglers don't poison the stats
+            d = dt - self.mean
+            self.mean += self.alpha * d
+            self.var = (1 - self.alpha) * (self.var + self.alpha * d * d)
+        return is_straggler
+
+
+@dataclass
+class HostState:
+    last_seen: float
+    suspect_count: int = 0
+
+
+class HeartbeatMonitor:
+    """Tracks per-host heartbeats; hosts silent past `deadline_s` are dead.
+
+    ``clock`` is injectable for tests."""
+
+    def __init__(self, hosts: list[str], deadline_s: float = 60.0,
+                 clock: Callable[[], float] = time.monotonic):
+        self.deadline_s = deadline_s
+        self.clock = clock
+        self.hosts = {h: HostState(last_seen=clock()) for h in hosts}
+
+    def beat(self, host: str):
+        self.hosts[host].last_seen = self.clock()
+        self.hosts[host].suspect_count = 0
+
+    def mark_suspect(self, host: str):
+        self.hosts[host].suspect_count += 1
+
+    def dead_hosts(self) -> list[str]:
+        now = self.clock()
+        return [h for h, s in self.hosts.items()
+                if now - s.last_seen > self.deadline_s or s.suspect_count >= 3]
+
+    def plan_rescale(self, mesh_shape: tuple[int, ...]) -> Optional[tuple]:
+        """Largest (data', model) mesh that excludes dead hosts — shrink the
+        data axis (pure-DP dimension) first; model-axis loss forces a full
+        restart on fewer pods."""
+        dead = len(self.dead_hosts())
+        if not dead:
+            return None
+        data, model = mesh_shape[-2], mesh_shape[-1]
+        alive = data * model - dead
+        new_data = alive // model
+        if new_data < 1:
+            return None
+        return (*mesh_shape[:-2], new_data, model)
+
+
+def run_with_restarts(make_state, train_loop, *, max_failures: int = 3,
+                      on_restart: Optional[Callable] = None):
+    """Crash-looping driver.
+
+    make_state() -> state (fresh or restored inside train_loop);
+    train_loop(state, failure_count) runs until completion or raises.
+    """
+    failures = 0
+    while True:
+        try:
+            state = make_state()
+            return train_loop(state, failures)
+        except KeyboardInterrupt:
+            raise
+        except Exception:
+            failures += 1
+            if failures > max_failures:
+                raise
+            if on_restart is not None:
+                on_restart(failures)

@@ -1,0 +1,102 @@
+"""Train step assembly: autodiff, microbatched gradient accumulation,
+optional int8 pod-axis gradient compression, AdamW update, metrics.
+
+The returned ``train_step`` is pure — (params, opt_state, batch, step) ->
+(params, opt_state, metrics) — and is jitted/lowered by the caller with
+explicit shardings (see launch/dryrun.py, launch/train.py).
+
+Distributed-optimization notes (DESIGN.md §7):
+  * grad accumulation is a ``lax.scan`` over microbatches — XLA's
+    latency-hiding scheduler overlaps microbatch i's gradient all-reduce
+    with microbatch i+1's backward compute;
+  * with ``compression='int8_pod'`` the inter-pod reduction goes through
+    repro.distributed.compression (int8 on the slow links);
+  * ``zero=True`` shards optimizer moments over the data axis (ZeRO-1):
+    XLA turns the gradient all-reduce into reduce-scatter + the param
+    update all-gather.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import lm
+from repro.train import optimizer as opt_mod
+from repro.train.optimizer import AdamWConfig, OptState
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    optimizer: AdamWConfig = AdamWConfig()
+    grad_accum: int = 1
+    remat: bool = True
+    compression: Optional[str] = None       # None | 'int8_pod'
+    zero: bool = False                      # ZeRO-1 optimizer-state sharding
+    max_grad_norm: float = 1.0
+
+
+def _split_microbatches(batch: dict, n: int) -> dict:
+    def r(x):
+        return x.reshape((n, x.shape[0] // n) + x.shape[1:])
+    return jax.tree.map(r, batch)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda l: (l.astype(jnp.float32) * scale).astype(l.dtype),
+                        tree), norm
+
+
+def make_train_step(cfg: ModelConfig, tcfg: TrainConfig, mesh=None) -> Callable:
+    loss_fn = functools.partial(lm.loss_fn, cfg, remat=tcfg.remat)
+
+    def loss_wrap(params, batch):
+        return loss_fn(params, batch)
+
+    if tcfg.compression == "int8_pod" and mesh is not None:
+        from repro.distributed.compression import pod_compressed_grads
+        grad_fn = pod_compressed_grads(lambda p, b: loss_wrap(p, b), mesh)
+    else:
+        def grad_fn(params, batch):
+            (l, aux), g = jax.value_and_grad(loss_wrap, has_aux=True)(params, batch)
+            return l, aux, g
+
+    def compute_grads(params, batch):
+        if tcfg.grad_accum <= 1:
+            return grad_fn(params, batch)
+        micro = _split_microbatches(batch, tcfg.grad_accum)
+
+        def body(carry, mb):
+            acc, lsum = carry
+            l, aux, g = grad_fn(params, mb)
+            acc = jax.tree.map(lambda a, gi: a + gi.astype(jnp.float32), acc, g)
+            return (acc, lsum + l), aux
+
+        acc0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (acc, lsum), auxs = jax.lax.scan(body, (acc0, 0.0), micro)
+        g = jax.tree.map(lambda a: a / tcfg.grad_accum, acc)
+        aux = jax.tree.map(lambda a: a[-1], auxs)
+        return lsum / tcfg.grad_accum, aux, g
+
+    def train_step(params, opt_state: OptState, batch, step):
+        loss, aux, grads = compute_grads(params, batch)
+        grads, gnorm = clip_by_global_norm(grads, tcfg.max_grad_norm)
+        new_params, new_opt = opt_mod.update(tcfg.optimizer, grads, opt_state, params)
+        metrics = {"loss": loss, "grad_norm": gnorm,
+                   "lr": opt_mod.schedule(tcfg.optimizer, opt_state.count + 1)}
+        if isinstance(aux, dict):
+            metrics.update({k: v for k, v in aux.items()})
+        return new_params, new_opt, metrics
+
+    return train_step

@@ -1,0 +1,153 @@
+"""The paper's core claim, as an executable invariant: the horizontally
+fused kernel is FUNCTIONALLY EQUIVALENT to running the two kernels natively,
+for every thread-space partition (schedule).  Property-tested with hypothesis
+over schedules and shapes; plus cost-model scenario checks (§IV-C)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import autotuner, hfuse, planner
+from repro.core.cost_model import Schedule, fusion_profitable, hfused_cost
+from repro.kernels import paper_suite as ps
+
+
+def _check_pair(opA, mkA, refA, opB, mkB, refB, sched, tol=1e-4):
+    xa = mkA(jax.random.PRNGKey(0))
+    xb = mkB(jax.random.PRNGKey(1))
+    fused = hfuse.generate(opA, opB, sched, interpret=True)
+    outs = fused(*xa, *xb)
+    wa, wb = refA(*xa), refB(*xb)
+    wa = wa if isinstance(wa, tuple) else (wa,)
+    wb = wb if isinstance(wb, tuple) else (wb,)
+    for got, want in zip(outs, (*wa, *wb)):
+        np.testing.assert_allclose(np.asarray(got, np.float32)[..., :1],
+                                   np.asarray(want, np.float32)[..., :1],
+                                   rtol=tol, atol=tol)
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(want, np.float32),
+                                   rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("ra,rb", [(1, 1), (2, 1), (1, 3), (4, 2)])
+def test_fused_equivalence_mixed_pair(ra, rb):
+    opA, mkA, refA = ps.make_upsample(R=512, C=128, bm=128)
+    opB, mkB, refB = ps.make_sha_like(R=512, C=128, bm=128)
+    _check_pair(opA, mkA, refA, opB, mkB, refB, Schedule(ra, rb))
+
+
+@pytest.mark.parametrize("a,b", ps.paper_pairs())
+def test_all_16_paper_pairs_fuse_correctly(a, b):
+    """Every Fig. 7 pair: fused == native at schedule 1:1 (reduced sizes)."""
+    small = dict(
+        maxpool=dict(R=256, C=128, bm=64),
+        bnstats=dict(R=256, C=128, bm=64),
+        upsample=dict(R=256, C=128, bm=64),
+        im2col=dict(R=256, C=128, bm=64),
+        hist=dict(R=256, C=128, bm=32),
+        ethash_like=dict(R_dag=512, bm=128),
+        sha_like=dict(R=256, bm=64),
+        blake_like=dict(R=256, bm=64),
+        blake2b_like=dict(R=256, bm=64),
+    )
+    opA, mkA, refA = ps.ALL_KERNELS[a](**small[a])
+    opB, mkB, refB = ps.ALL_KERNELS[b](**small[b])
+    _check_pair(opA, mkA, refA, opB, mkB, refB, Schedule(1, 1), tol=2e-3)
+
+
+@settings(max_examples=12, deadline=None)
+@given(ra=st.integers(1, 5), rb=st.integers(1, 5),
+       bmA=st.sampled_from([64, 128]), seed=st.integers(0, 2 ** 20))
+def test_fused_equivalence_property(ra, rb, bmA, seed):
+    """Property: ANY interleave ratio and block size is equivalence-preserving
+    (the paper's Generate() correctness condition)."""
+    opA, mkA, refA = ps.make_maxpool(R=512, C=128, bm=bmA)
+    opB, mkB, refB = ps.make_blake_like(R=256, C=128, bm=64)
+    xa = mkA(jax.random.PRNGKey(seed))
+    xb = mkB(jax.random.PRNGKey(seed + 1))
+    fused = hfuse.generate(opA, opB, Schedule(ra, rb), interpret=True)
+    outs = fused(*xa, *xb)
+    np.testing.assert_allclose(np.asarray(outs[0]), np.asarray(refA(*xa)),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(outs[1], np.float32),
+                               np.asarray(refB(*xb), np.float32),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_vfused_equivalence():
+    opA, mkA, refA = ps.make_bnstats(R=512, C=128, bm=128)
+    opB, mkB, refB = ps.make_hist(R=256, C=128, bm=64)
+    xa = mkA(jax.random.PRNGKey(0))
+    xb = mkB(jax.random.PRNGKey(1))
+    fused = hfuse.generate_vfused(opA, opB, interpret=True)
+    outs = fused(*xa, *xb)
+    np.testing.assert_allclose(np.asarray(outs[0]), np.asarray(refA(*xa)),
+                               rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(outs[1]), np.asarray(refB(*xb)),
+                               atol=0.5)
+
+
+# ---------------------------------------------------------------------------
+# cost model scenario structure (paper §IV-C)
+# ---------------------------------------------------------------------------
+def test_mixed_pair_profits_similar_pair_does_not():
+    up, _, _ = ps.make_upsample()
+    sha, _, _ = ps.make_sha_like()
+    blake, _, _ = ps.make_blake_like()
+    assert fusion_profitable(up, sha)            # Ethash+Blake256 scenario
+    assert not fusion_profitable(sha, blake)     # Blake256+SHA256 scenario
+    mixed = hfused_cost(up, sha, Schedule(1, 1))
+    same = hfused_cost(sha, blake, Schedule(1, 1))
+    assert mixed.speedup_pct() > same.speedup_pct()
+    assert mixed.speedup_pct() > 5.0
+
+
+@settings(max_examples=25, deadline=None)
+@given(ra=st.integers(1, 8), rb=st.integers(1, 8))
+def test_cost_model_bounds_property(ra, rb):
+    """t_hfused is never better than the engine-sum lower bound and never
+    worse than serial execution (when VMEM fits)."""
+    a, _, _ = ps.make_ethash_like(R_dag=8192, bm=256)
+    b, _, _ = ps.make_blake_like(R=2048, bm=256)
+    from repro.core.cost_model import native_time
+    est = hfused_cost(a, b, Schedule(ra, rb))
+    lower = max(a.t_compute + b.t_compute, a.t_memory + b.t_memory)
+    if est.vmem_ok:
+        assert est.t_hfused >= lower * 0.999
+        assert est.t_hfused <= (native_time(a) + native_time(b)) * 1.001
+
+
+def test_autotuner_finds_best_logged_candidate():
+    a, _, _ = ps.make_ethash_like(R_dag=16384, bm=512)
+    b, _, _ = ps.make_blake_like(R=4096, bm=512)
+    res = autotuner.search((a, b))
+    assert res.best.est.t_hfused == min(c.est.t_hfused for c in res.log)
+    assert res.best.est.speedup_pct() > 0
+    assert len(res.log) >= 4                      # actually searched
+
+
+def test_planner_pairs_and_rejections():
+    ops_list = []
+    for f in [ps.make_ethash_like, ps.make_upsample, ps.make_sha_like,
+              ps.make_blake_like, ps.make_blake2b_like]:
+        op, _, _ = f()
+        ops_list.append(planner.GraphOp(op))
+    plan = planner.plan(ops_list)
+    fused_names = {frozenset((d.a, d.b)) for d in plan.fused}
+    # both memory-bound ops get compute partners
+    assert any("ethash_like" in p for p in fused_names)
+    assert any("upsample" in p for p in fused_names)
+    # never fuses two compute kernels together
+    for pair in fused_names:
+        bounds = {("compute" if "sha" in n or "blake" in n else "memory")
+                  for n in pair}
+        assert bounds == {"compute", "memory"}
+
+
+def test_planner_respects_dependencies():
+    a, _, _ = ps.make_upsample()
+    b, _, _ = ps.make_sha_like()
+    g = [planner.GraphOp(a), planner.GraphOp(b, deps=frozenset({a.name}))]
+    plan = planner.plan(g)
+    assert not plan.fused                         # dependent: must not fuse

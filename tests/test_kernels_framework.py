@@ -1,0 +1,110 @@
+"""Framework kernels (matmul, rmsnorm, flash/decode attention, MoE GMM,
+fused Adam) vs oracles, sweeping shapes/dtypes in interpret mode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import hfuse
+from repro.kernels import ops, ref
+from repro.kernels.decode_attention import decode_attention_op
+from repro.kernels.matmul import matmul_1d_op
+from repro.kernels.rmsnorm import rmsnorm_op
+
+
+@pytest.fixture(autouse=True)
+def interpret_mode():
+    ops.force("interpret")
+    yield
+    ops.force(None)
+
+
+@pytest.mark.parametrize("M,K,N,bm,bn,bk", [
+    (256, 128, 128, 128, 128, 128),
+    (512, 256, 384, 256, 128, 128),
+    (128, 512, 256, 128, 256, 256),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_matmul(M, K, N, bm, bn, bk, dtype, rng):
+    x = jax.random.normal(rng, (M, K), dtype)
+    w = jax.random.normal(jax.random.PRNGKey(7), (K, N), dtype)
+    got = ops.matmul(x, w, bm=bm, bn=bn, bk=bk)
+    want = ref.matmul(x, w)
+    tol = 1e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol * 10)
+
+
+@pytest.mark.parametrize("R,d", [(256, 128), (512, 512), (128, 384)])
+def test_rmsnorm(R, d, rng):
+    x = jax.random.normal(rng, (R, d), jnp.float32)
+    s = jax.random.normal(jax.random.PRNGKey(3), (d,), jnp.float32) * 0.1
+    np.testing.assert_allclose(np.asarray(ops.rmsnorm(x, s)),
+                               np.asarray(ref.rmsnorm(x, s)),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("S,H,Hkv,D", [(128, 4, 4, 64), (256, 4, 2, 64),
+                                       (256, 8, 1, 128)])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention(S, H, Hkv, D, causal, rng):
+    B = 2
+    q = jax.random.normal(rng, (B, S, H, D), jnp.float32)
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, S, Hkv, D), jnp.float32)
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, S, Hkv, D), jnp.float32)
+    got = ops.flash_attention(q, k, v, causal=causal)
+    ops.force("ref")
+    want = ops.flash_attention(q, k, v, causal=causal)
+    ops.force("interpret")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=3e-5)
+
+
+@pytest.mark.parametrize("B,S,H,Hkv,D,ck", [(2, 512, 8, 2, 64, 128),
+                                            (1, 256, 4, 4, 128, 256),
+                                            (4, 1024, 8, 1, 64, 512)])
+def test_decode_attention_op(B, S, H, Hkv, D, ck, rng):
+    op = decode_attention_op(B=B, S=S, H=H, Hkv=Hkv, D=D,
+                             dtype=jnp.float32, ck=ck)
+    q = jax.random.normal(rng, (B, H, D), jnp.float32)
+    k = jax.random.normal(jax.random.PRNGKey(5), (B, S, Hkv, D), jnp.float32)
+    v = jax.random.normal(jax.random.PRNGKey(6), (B, S, Hkv, D), jnp.float32)
+    outs = hfuse.run_single(op, interpret=True)(q, k, v)
+    want = ref.decode_attention(q, k, v, S)
+    np.testing.assert_allclose(np.asarray(outs[0]), np.asarray(want),
+                               atol=3e-5)
+
+
+@pytest.mark.parametrize("E,C,d,f,act", [(4, 256, 64, 32, "silu"),
+                                         (8, 128, 128, 64, "gelu")])
+def test_moe_gmm(E, C, d, f, act, rng):
+    xe = jax.random.normal(rng, (E, C, d), jnp.float32)
+    win = jax.random.normal(jax.random.PRNGKey(1), (E, d, 2 * f)) * 0.1
+    wout = jax.random.normal(jax.random.PRNGKey(2), (E, f, d)) * 0.1
+    got = ops.moe_gmm(xe, win, wout, act=act)
+    want = ref.moe_gmm(xe, win, wout, act=act)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=5e-4, atol=5e-4)
+
+
+def test_hfused_adam_matches_per_tensor(rng):
+    """One flat fused launch == N per-tensor reference updates."""
+    params = {"w1": jax.random.normal(rng, (37, 11), jnp.float32),
+              "w2": {"a": jax.random.normal(rng, (130,), jnp.float32)}}
+    grads = jax.tree.map(lambda p: p * 0.03 + 0.01, params)
+    m = jax.tree.map(lambda p: jnp.full_like(p, 0.05), params)
+    v = jax.tree.map(lambda p: jnp.full_like(p, 0.02), params)
+    kw = dict(lr=1e-2, b1=0.9, b2=0.95, eps=1e-8, wd=0.1, bc1=0.1, bc2=0.05)
+    newp, newm, newv = ops.hfused_adamw(params, grads, m, v, **kw)
+    for path in [("w1",), ("w2", "a")]:
+        def get(t):
+            for p in path:
+                t = t[p]
+            return t
+        wp, wm, wv = ref.adamw(get(params), get(grads), get(m), get(v), **kw)
+        np.testing.assert_allclose(np.asarray(get(newp)), np.asarray(wp),
+                                   rtol=1e-6)
+        np.testing.assert_allclose(np.asarray(get(newm)), np.asarray(wm),
+                                   rtol=1e-6)
+        np.testing.assert_allclose(np.asarray(get(newv)), np.asarray(wv),
+                                   rtol=1e-6)

@@ -1,0 +1,87 @@
+"""Per-kernel allclose sweeps vs the pure-jnp oracles (interpret mode),
+across shapes and dtypes, for the 9 paper-analogue atoms."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import hfuse
+from repro.kernels import paper_suite as ps
+
+SHAPE_SWEEP = [(512, 256, 128), (1024, 512, 256), (2048, 128, 128)]
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+def run_and_check(op, mk, ref, key, tol):
+    xs = mk(key)
+    outs = hfuse.run_single(op, interpret=True)(*xs)
+    want = ref(*xs)
+    if not isinstance(want, (list, tuple)):
+        want = (want,)
+    for got, exp in zip(outs, want):
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(exp, np.float32),
+                                   rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("R,C,bm", SHAPE_SWEEP)
+@pytest.mark.parametrize("name", ["maxpool", "upsample", "im2col"])
+def test_elementwise_atoms(name, R, C, bm, dtype, rng):
+    op, mk, ref = ps.ALL_KERNELS[name](R=R, C=C, dtype=dtype, bm=bm)
+    run_and_check(op, mk, ref, rng, 1e-5 if dtype == jnp.float32 else 2e-2)
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("R,C,bm", [(1024, 256, 128), (4096, 512, 512)])
+def test_bnstats(R, C, bm, dtype, rng):
+    op, mk, ref = ps.make_bnstats(R=R, C=C, dtype=dtype, bm=bm)
+    tol = 1e-3 if dtype == jnp.float32 else 2.0   # bf16 sums over many rows
+    run_and_check(op, mk, ref, rng, tol)
+
+
+@pytest.mark.parametrize("R,C,bm", [(512, 128, 64), (1024, 256, 128)])
+def test_hist(R, C, bm, rng):
+    op, mk, ref = ps.make_hist(R=R, C=C, bm=bm)
+    xs = mk(rng)
+    outs = hfuse.run_single(op, interpret=True)(*xs)
+    want = ref(*xs)
+    np.testing.assert_allclose(np.asarray(outs[0]), np.asarray(want), atol=0.5)
+    assert float(outs[0].sum()) == R * C          # every element counted once
+
+
+@pytest.mark.parametrize("name", ["sha_like", "blake_like", "blake2b_like"])
+def test_hash_like(name, rng):
+    op, mk, ref = ps.CRYPTO_KERNELS[name](R=1024, bm=256)
+    run_and_check(op, mk, ref, rng, 1e-5)
+    assert op.bound == "compute"
+
+
+def test_ethash_like(rng):
+    op, mk, ref = ps.make_ethash_like(R_dag=4096, bm=256)
+    run_and_check(op, mk, ref, rng, 1e-4)
+    assert op.bound == "memory"
+
+
+def test_paper_pairs_structure():
+    pairs = ps.paper_pairs()
+    assert len(pairs) == 16                       # 10 DL + 6 crypto (Fig. 7)
+    dl = set(ps.DL_KERNELS)
+    assert sum(1 for a, b in pairs if a in dl and b in dl) == 10
+
+
+def test_resource_profiles_match_paper_table():
+    """Fig. 8 structure: Ethash memory-bound, hashes compute-bound,
+    maxpool/upsample/bnstats memory-bound."""
+    bounds = {}
+    for name, f in ps.ALL_KERNELS.items():
+        op, _, _ = f()
+        bounds[name] = op.bound
+    assert bounds["ethash_like"] == "memory"
+    assert bounds["maxpool"] == "memory"
+    assert bounds["upsample"] == "memory"
+    assert bounds["bnstats"] == "memory"
+    assert bounds["im2col"] == "memory"
+    assert bounds["sha_like"] == "compute"
+    assert bounds["blake_like"] == "compute"
+    assert bounds["blake2b_like"] == "compute"

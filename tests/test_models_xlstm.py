@@ -1,0 +1,84 @@
+"""mLSTM chunked-parallel form == sequential recurrence (the xLSTM
+correctness core), plus RG-LRU associative-scan == step recurrence."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models import rglru, xlstm
+
+
+def _rand_qkvg(key, B, S, H, dk, dv):
+    ks = jax.random.split(key, 5)
+    q = jax.random.normal(ks[0], (B, S, H, dk))
+    k = jax.random.normal(ks[1], (B, S, H, dk))
+    v = jax.random.normal(ks[2], (B, S, H, dv))
+    ip = jax.random.normal(ks[3], (B, S, H)) * 2.0
+    fp = jax.random.normal(ks[4], (B, S, H)) * 2.0 + 2.0
+    return q, k, v, ip, fp
+
+
+@pytest.mark.parametrize("S,chunk", [(16, 4), (32, 8), (64, 64), (48, 16)])
+def test_mlstm_chunked_equals_sequential(S, chunk, rng):
+    B, H, dk, dv = 2, 3, 8, 16
+    q, k, v, ip, fp = _rand_qkvg(rng, B, S, H, dk, dv)
+    st0 = xlstm.mlstm_fresh_state(B, H, dk, dv)
+    h_seq, s_seq = xlstm.mlstm_seq(q, k, v, ip, fp, st0)
+    h_chk, s_chk = xlstm.mlstm_chunked(q, k, v, ip, fp, st0, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(h_chk), np.asarray(h_seq),
+                               rtol=2e-4, atol=2e-4)
+    for a, b in zip(s_chk, s_seq):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(S=st.integers(2, 24), seed=st.integers(0, 2 ** 30))
+def test_mlstm_chunked_property(S, seed):
+    """Property: any (S, gate) draw — chunked(LS=S) == sequential."""
+    B, H, dk, dv = 1, 2, 4, 4
+    q, k, v, ip, fp = _rand_qkvg(jax.random.PRNGKey(seed), B, S, H, dk, dv)
+    st0 = xlstm.mlstm_fresh_state(B, H, dk, dv)
+    h_seq, _ = xlstm.mlstm_seq(q, k, v, ip, fp, st0)
+    h_chk, _ = xlstm.mlstm_chunked(q, k, v, ip, fp, st0, chunk=S)
+    np.testing.assert_allclose(np.asarray(h_chk), np.asarray(h_seq),
+                               rtol=5e-4, atol=5e-4)
+
+
+def test_mlstm_state_carry_across_calls(rng):
+    """Splitting a sequence across two chunked calls == one call."""
+    B, H, dk, dv = 1, 2, 4, 8
+    S = 32
+    q, k, v, ip, fp = _rand_qkvg(rng, B, S, H, dk, dv)
+    st0 = xlstm.mlstm_fresh_state(B, H, dk, dv)
+    h_all, _ = xlstm.mlstm_chunked(q, k, v, ip, fp, st0, chunk=8)
+    h1, st1 = xlstm.mlstm_chunked(q[:, :16], k[:, :16], v[:, :16],
+                                  ip[:, :16], fp[:, :16], st0, chunk=8)
+    h2, _ = xlstm.mlstm_chunked(q[:, 16:], k[:, 16:], v[:, 16:],
+                                ip[:, 16:], fp[:, 16:], st1, chunk=8)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([h1, h2], 1)),
+                               np.asarray(h_all), rtol=2e-4, atol=2e-4)
+
+
+def test_rglru_scan_equals_steps(rng):
+    from repro.configs import get_config
+    cfg = get_config("recurrentgemma-2b").reduced()
+    import dataclasses
+    cfg = dataclasses.replace(cfg, dtype="float32")
+    from repro.models.base import init_params
+    p = init_params(rglru.spec(cfg), rng, jnp.float32)
+    B, S = 2, 8
+    W = cfg.lru_width or cfg.d_model
+    rec = jax.random.normal(rng, (B, S, W), jnp.float32)
+    y_scan, h_last = rglru.rg_lru_scan(p, rec)
+    h = jnp.zeros((B, W), jnp.float32)
+    outs = []
+    for t in range(S):
+        y_t, h = rglru.rg_lru_step(p, rec[:, t], h)
+        outs.append(y_t)
+    y_step = jnp.stack(outs, 1)
+    np.testing.assert_allclose(np.asarray(y_scan), np.asarray(y_step),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(h_last), np.asarray(h),
+                               rtol=1e-5, atol=1e-5)

@@ -1,0 +1,54 @@
+"""Pipeline parallelism over the pod axis: GPipe schedule == sequential
+application, verified numerically on 8 fake devices (2 pods x 2 data x 2
+model) in a subprocess."""
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+SRC = str(Path(__file__).resolve().parents[1] / "src")
+
+CODE = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import sys; sys.path.insert(0, {src!r})
+    import jax, jax.numpy as jnp, numpy as np
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.launch.mesh import make_debug_mesh
+    from repro.distributed.pipeline import pipeline_over_pods
+
+    mesh = make_debug_mesh((2, 2, 2), ("pod", "data", "model"))
+    key = jax.random.PRNGKey(0)
+    d = 16
+    # two homogeneous stages, each a 2-layer MLP
+    W = jax.random.normal(key, (2, 2, d, d), jnp.float32) * 0.3   # (stage,layer,d,d)
+
+    def stage_fn(params, x):
+        for i in range(2):
+            x = jnp.tanh(x @ params[i])
+        return x
+
+    M, B = 4, 8
+    xs = jax.random.normal(jax.random.PRNGKey(1), (M, B, d), jnp.float32)
+
+    run = pipeline_over_pods(stage_fn, mesh, n_stages=2)
+    W_sh = jax.device_put(W, NamedSharding(mesh, P("pod")))
+    ys = jax.jit(run)(W_sh, xs)
+
+    # oracle: sequential stages
+    want = xs
+    for s in range(2):
+        want = jax.vmap(lambda x: stage_fn(W[s], x))(want)
+    err = float(jnp.max(jnp.abs(ys - want)))
+    assert err < 1e-5, err
+    # collective-permute present in the compiled module
+    txt = jax.jit(run).lower(W_sh, xs).compile().as_text()
+    assert "collective-permute" in txt
+    print("PIPELINE OK", err)
+""")
+
+
+def test_gpipe_matches_sequential():
+    out = subprocess.run([sys.executable, "-c", CODE.format(src=SRC)],
+                         capture_output=True, text=True, timeout=600)
+    assert "PIPELINE OK" in out.stdout, out.stderr[-3000:]
