@@ -36,5 +36,22 @@ def check_pair_numerics(opA, mkA, refA, opB, mkB, refB, sched) -> float:
     return err
 
 
+def check_bundle_numerics(ops, mks, refs, sched) -> float:
+    """Build the N-way fused bundle, run in interpret mode, return max |err|."""
+    from repro.core import hfuse
+    xs = [mk(jax.random.PRNGKey(i)) for i, mk in enumerate(mks)]
+    fused = hfuse.generate(ops, sched, interpret=True)
+    outs = fused(*[a for x in xs for a in x])
+    err, off = 0.0, 0
+    for x, ref in zip(xs, refs):
+        want = ref(*x)
+        want = want if isinstance(want, tuple) else (want,)
+        for w in want:
+            err = max(err, float(np.max(np.abs(
+                np.asarray(outs[off], np.float32) - np.asarray(w, np.float32)))))
+            off += 1
+    return err
+
+
 def csv_row(*cols):
     print(",".join(str(c) for c in cols), flush=True)

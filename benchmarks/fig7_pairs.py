@@ -1,4 +1,5 @@
-"""Paper Fig. 7: kernel-pair speedup vs native, across execution-time ratios.
+"""Paper Fig. 7: kernel-pair speedup vs native, across execution-time ratios
+— plus the beyond-paper N-way sweep (pair-vs-triple bundles).
 
 16 pairs (10 DL + 6 crypto).  For each pair we sweep the workload of the
 first kernel to hit execution-time ratios ~{1/4, 1/2, 1, 2, 4} and report:
@@ -6,16 +7,22 @@ first kernel to hit execution-time ratios ~{1/4, 1/2, 1, 2, 4} and report:
   Naive  — horizontal fusion, even 1:1 interleave, no tuning
   HFuse  — autotuned schedule (+VMEM cap when needed) — the paper's system
 
-Numerics of the HFuse kernel are asserted against the oracles for the
-representative (ratio≈1) point of every pair.
+``run_nway`` extends the sweep to the registered 3-way bundles
+(paper_triples): for each triple it reports the best *pairwise* plan (best
+fused pair + the leftover single — all the paper's system can do) against
+the 3-way bundle, so the perf trajectory captures pair-vs-triple speedups.
+
+Numerics of every reported fused kernel are asserted against the oracles
+at reduced sizes.
 """
 from __future__ import annotations
 
+import itertools
 import math
 
 import jax
 
-from benchmarks.common import check_pair_numerics, csv_row
+from benchmarks.common import check_bundle_numerics, check_pair_numerics, csv_row
 from repro.core import autotuner
 from repro.core.cost_model import Schedule, hfused_cost, native_time
 from repro.kernels import paper_suite as ps
@@ -23,13 +30,7 @@ from repro.kernels import paper_suite as ps
 RATIOS = (0.25, 0.5, 1.0, 2.0, 4.0)
 
 # reduced-size kwargs for the numerics check (interpret mode is O(grid) slow)
-SMALL = dict(
-    maxpool=dict(R=256, C=128, bm=64), bnstats=dict(R=256, C=128, bm=64),
-    upsample=dict(R=256, C=128, bm=64), im2col=dict(R=256, C=128, bm=64),
-    hist=dict(R=256, C=128, bm=32), ethash_like=dict(R_dag=512, bm=128),
-    sha_like=dict(R=256, bm=64), blake_like=dict(R=256, bm=64),
-    blake2b_like=dict(R=256, bm=64),
-)
+SMALL = ps.SMALL_KW
 
 
 def scaled(name: str, scale: float):
@@ -78,5 +79,40 @@ def run(check_numerics: bool = True):
                     f"{err:.1e}")
 
 
+def run_nway(check_numerics: bool = True):
+    """Pair-vs-triple: best pairwise plan vs the N-way bundle per triple."""
+    csv_row("bundle", "t_native_us", "best_pair_speedup_pct",
+            "nway_speedup_pct", "nway_sched", "vmem_cap", "max_err")
+    for names in ps.paper_triples():
+        ops, _, _ = ps.make_bundle(names)
+        t_native = sum(native_time(op) for op in ops)
+
+        # best the pairwise system can do: fuse one pair, run the rest native
+        best_pair_t = t_native
+        for i, j in itertools.combinations(range(len(ops)), 2):
+            res = autotuner.search((ops[i], ops[j]))
+            rest = sum(native_time(ops[k]) for k in range(len(ops))
+                       if k not in (i, j))
+            best_pair_t = min(best_pair_t, res.best.est.t_hfused + rest)
+
+        res_n = autotuner.search(tuple(ops))
+        err = float("nan")
+        if check_numerics:
+            # verify the TUNED schedule (ratio vectors are size-independent),
+            # not just 1:1:..:1 — the row's speedup belongs to this kernel
+            small_ops, mks, refs = ps.make_bundle(names, small=True)
+            err = check_bundle_numerics(small_ops, mks, refs,
+                                        res_n.best.sched)
+            assert err < 2e-2, (names, err)
+        csv_row("+".join(names),
+                round(t_native * 1e6, 2),
+                round(100 * (t_native - best_pair_t) / t_native, 1),
+                round(res_n.best.est.speedup_pct(), 1),
+                res_n.best.sched.label(),
+                res_n.best.vmem_cap or 0,
+                f"{err:.1e}")
+
+
 if __name__ == "__main__":
     run()
+    run_nway()

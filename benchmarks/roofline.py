@@ -167,6 +167,7 @@ def markdown(rows) -> str:
 
 def run():
     rows = build_table()
+    ART.parent.mkdir(parents=True, exist_ok=True)
     (ART.parent / "roofline_table.json").write_text(
         json.dumps(rows, indent=1, default=float))
     from benchmarks.common import csv_row

@@ -1,7 +1,11 @@
 """Benchmark driver — one section per paper table/figure + the framework
-integration table + the roofline summary.
+integration table + the N-way bundle sweep + the roofline summary.
 
-  PYTHONPATH=src python -m benchmarks.run [--fast]
+  PYTHONPATH=src python -m benchmarks.run [--fast] [--smoke]
+
+``--smoke`` runs just one tiny fused pair and one tiny 3-way bundle in
+interpret mode with numerics checks — the CI guard that keeps the
+benchmark code paths from rotting without paying for the full sweep.
 
 Time columns are cost-model derived over exact FLOP/byte counts (TPU v5e
 targets; this host is CPU-only — see benchmarks/common.py §Methodology);
@@ -17,11 +21,38 @@ from pathlib import Path
 sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
 
+def smoke() -> None:
+    """One tiny fused pair + one tiny 3-way bundle, interpret mode."""
+    from benchmarks.common import check_bundle_numerics, check_pair_numerics
+    from repro.core.cost_model import Schedule
+    from repro.kernels import paper_suite as ps
+
+    opA, mkA, refA = ps.make_maxpool(**ps.SMALL_KW["maxpool"])
+    opB, mkB, refB = ps.make_sha_like(**ps.SMALL_KW["sha_like"])
+    err = check_pair_numerics(opA, mkA, refA, opB, mkB, refB, Schedule(1, 1))
+    assert err < 2e-2, f"pair smoke numerics: {err}"
+    print(f"# smoke pair maxpool+sha_like: max_err {err:.1e}")
+
+    names = ps.paper_triples()[0]
+    ops, mks, refs = ps.make_bundle(names, small=True)
+    err3 = check_bundle_numerics(ops, mks, refs, Schedule((1,) * len(ops)))
+    assert err3 < 2e-2, f"bundle smoke numerics: {err3}"
+    print(f"# smoke bundle {'+'.join(names)}: max_err {err3:.1e}")
+    print("SMOKE OK")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true",
                     help="skip interpret-mode numerics verification")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny pair + 3-way bundle with numerics, then exit "
+                         "(the CI benchmark-smoke job)")
     args = ap.parse_args()
+
+    if args.smoke:
+        smoke()
+        return
 
     from benchmarks import fig7_pairs, fig8_kernels, fig9_fused, fig_framework
     from benchmarks import roofline
@@ -35,6 +66,11 @@ def main() -> None:
     t0 = time.time()
     fig7_pairs.run(check_numerics=not args.fast)
     print(f"# fig7 done in {time.time() - t0:.1f}s\n")
+
+    print("# === fig7-nway: pair-vs-triple bundles (beyond paper) ===")
+    t0 = time.time()
+    fig7_pairs.run_nway(check_numerics=not args.fast)
+    print(f"# fig7-nway done in {time.time() - t0:.1f}s\n")
 
     print("# === fig9: fused metrics ±VMEM cap (paper Fig. 9, RegCap) ===")
     t0 = time.time()

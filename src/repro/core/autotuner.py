@@ -1,8 +1,8 @@
-"""The paper's Main() search (Fig. 6), adapted:
+"""The paper's Main() search (Fig. 6), adapted and generalized to bundles:
 
   paper                                  here
   -------------------------------------  -----------------------------------
-  d1 <- 128, 256, ... (thread partition) Schedule(ra, rb) interleave ratios
+  d1 <- 128, 256, ... (thread partition) Schedule ratio vectors (r_0:..:r_N)
   profile F without register bound       cost under full VMEM budget
   compute r0, profile F with bound r0    cost under the computed VMEM cap
                                          (shrunk block variants if provided)
@@ -15,8 +15,7 @@ search log (EXPERIMENTS.md shows these for the fig7 pairs).
 """
 from __future__ import annotations
 
-import dataclasses
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Callable, Optional, Sequence
 
 from repro.core import hfuse
@@ -28,7 +27,7 @@ from repro.core.op_spec import OpSpec
 @dataclass
 class Candidate:
     sched: Schedule
-    variant: int                  # index into the (opA, opB) variant list
+    variant: int                  # index into the bundle-variant list
     vmem_cap: Optional[int]
     est: FusedEstimate
     measured_s: Optional[float] = None
@@ -42,54 +41,68 @@ class Candidate:
 class SearchResult:
     best: Candidate
     log: list[Candidate]
-    a: OpSpec
-    b: OpSpec
+    ops: tuple[OpSpec, ...]
+
+    # 2-op compatibility accessors
+    @property
+    def a(self) -> OpSpec:
+        return self.ops[0]
+
+    @property
+    def b(self) -> OpSpec:
+        return self.ops[1]
 
     def build(self, *, interpret: bool = False):
-        a, b = self.a, self.b
-        return hfuse.generate(a, b, self.best.sched, interpret=interpret,
+        return hfuse.generate(self.ops, self.best.sched, interpret=interpret,
                               vmem_limit=self.best.vmem_cap)
 
     def table(self) -> list[dict]:
         return [{
-            "ra": c.sched.ra, "rb": c.sched.rb, "variant": c.variant,
+            "sched": c.sched.label(), "variant": c.variant,
             "vmem_cap": c.vmem_cap, "t_hfused_us": c.est.t_hfused * 1e6,
             "speedup_pct": c.est.speedup_pct(), "vmem_ok": c.est.vmem_ok,
             "measured_s": c.measured_s,
         } for c in self.log]
 
 
-def search(variants: Sequence[tuple[OpSpec, OpSpec]] | tuple[OpSpec, OpSpec],
-           *, vmem_budget: int = VMEM_BUDGET,
-           measure: Optional[Callable] = None) -> SearchResult:
-    """Search schedules × op variants × VMEM caps.
+def _as_variants(variants) -> list[tuple[OpSpec, ...]]:
+    """One bundle (sequence of OpSpecs) or a list of bundle variants."""
+    variants = list(variants)
+    if variants and isinstance(variants[0], OpSpec):
+        return [tuple(variants)]
+    return [tuple(v) for v in variants]
 
-    ``variants``: one (opA, opB) pair or a list of pairs (e.g. alternative
-    block shapes — the register-cap analogue shrinks blocks to restore
-    pipelining headroom).
+
+def search(variants: Sequence, *, vmem_budget: int = VMEM_BUDGET,
+           measure: Optional[Callable] = None) -> SearchResult:
+    """Search schedules × bundle variants × VMEM caps.
+
+    ``variants``: one bundle — ``(opA, opB)`` or ``(op1, .., opN)`` — or a
+    list of alternative bundles (e.g. alternative block shapes — the
+    register-cap analogue shrinks blocks to restore pipelining headroom).
     """
-    if isinstance(variants, tuple) and isinstance(variants[0], OpSpec):
-        variants = [variants]
+    variants = _as_variants(variants)
     log: list[Candidate] = []
     best: Optional[Candidate] = None
-    for vi, (a, b) in enumerate(variants):
-        for sched in ratio_candidates(a, b):
+    best_ops: Optional[tuple[OpSpec, ...]] = None
+    for vi, ops in enumerate(variants):
+        for sched in ratio_candidates(ops):
             # "no register bound": full budget
             caps = [None]
-            # "with bound r0": the budget both ops would need to co-reside
+            # "with bound r0": the budget the bundle would need to co-reside
             # with full double buffering (paper Fig. 6 line 13-16 analogue)
-            need = 2 * (a.vmem_bytes + b.vmem_bytes)
+            need = 2 * sum(op.vmem_bytes for op in ops)
             if need > vmem_budget:
                 caps.append(vmem_budget)
             for cap in caps:
-                est = hfused_cost(a, b, sched,
+                est = hfused_cost(ops, sched,
                                   vmem_budget=cap or vmem_budget)
                 cand = Candidate(sched, vi, cap, est)
                 if measure is not None:
-                    fused = hfuse.generate(a, b, sched, vmem_limit=cap)
-                    cand.measured_s = measure(fused, a, b)
+                    fused = hfuse.generate(ops, sched, vmem_limit=cap)
+                    cand.measured_s = measure(fused, *ops)
                 log.append(cand)
                 if best is None or cand.score < best.score:
                     best = cand
-                    best_pair = (a, b)
-    return SearchResult(best=best, log=log, a=best_pair[0], b=best_pair[1])
+                    best_ops = ops
+    return SearchResult(best=best, log=log, ops=best_ops)

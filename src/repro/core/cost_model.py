@@ -2,24 +2,27 @@
 
 This is the napkin-math engine behind the planner and the autotuner — the
 role profiling plays in the paper's ``Main()`` (Fig. 6).  The fundamental
-inequality of horizontal fusion:
+inequality of horizontal fusion, generalized to an N-op bundle:
 
-    t_native(A;B) = max(tcA, tmA) + max(tcB, tmB)      (two kernels, serial)
-    t_hfused(A∪B) ≈ max(tcA + tcB, tmA + tmB)          (engines overlap)
+    t_native(K1;..;KN) = Σ_i max(tc_i, tm_i)           (N kernels, serial)
+    t_hfused(K1∪..∪KN) ≈ max(Σ_i tc_i, Σ_i tm_i)       (engines overlap)
 
-    gain = t_native − t_hfused ≥ 0, strictly > 0  iff  the bound kinds
-    differ (one memory-, one compute-bound) — the paper's §IV-C finding
-    (Ethash+Blake256 wins, Blake256+SHA256 loses) falls out directly.
+    gain = t_native − t_hfused ≥ 0, strictly > 0  iff  the bundle mixes
+    bound kinds (memory- and compute-bound members) — the paper's §IV-C
+    finding (Ethash+Blake256 wins, Blake256+SHA256 loses) falls out
+    directly, and extends: a second memory-bound op joining a
+    compute-dominated bundle still rides the idle HBM engine for free.
 
-VMEM pressure is the occupancy analogue: the fused kernel needs both ops'
-blocks resident (×2 for double buffering).  Exceeding the budget forfeits
-pipelining — modeled as degrading overlap from max(c,m) toward c+m — the
-same cliff the paper's register-cap search navigates.
+VMEM pressure is the occupancy analogue: the fused kernel needs every
+member's blocks resident (×2 for double buffering).  Exceeding the budget
+forfeits pipelining — modeled as degrading overlap from max(Σc, Σm) toward
+Σc+Σm — the same cliff the paper's register-cap search navigates.
 """
 from __future__ import annotations
 
-import dataclasses
+import math
 from dataclasses import dataclass
+from typing import Sequence
 
 from repro.core.op_spec import OpSpec
 from repro.distributed.hlo_analysis import HBM_BW, PEAK_FLOPS, VMEM_BYTES
@@ -29,10 +32,10 @@ VMEM_BUDGET = int(VMEM_BYTES * 0.8)        # leave headroom for spills/semaphore
 # Sub-roofline terms (TPU v5e).  The paper's GPU gains come partly from
 # effects *below* the roofline (issue-slot stalls); the TPU analogues we
 # model are (a) kernel launch/teardown (~2us — paper footnote 1: fusion
-# halves it) and (b) the pipeline ramp: the first block's DMA and the last
-# block's compute have nothing to overlap with (one (tc+tm)/N per kernel;
-# the fused kernel pays it once).  Same-resource pairs gain only these
-# small terms on TPU (and can lose via VMEM pressure) — the honest
+# amortizes it N-fold) and (b) the pipeline ramp: the first block's DMA and
+# the last block's compute have nothing to overlap with (one (tc+tm)/N per
+# kernel; the fused kernel pays it once).  Same-resource bundles gain only
+# these small terms on TPU (and can lose via VMEM pressure) — the honest
 # adaptation finding, recorded in EXPERIMENTS.md §Paper-validation.
 LAUNCH_S = 2e-6
 
@@ -43,20 +46,60 @@ def native_time(op: OpSpec) -> float:
     return max(op.t_compute, op.t_memory) + ramp + LAUNCH_S
 
 
-@dataclass(frozen=True)
 class Schedule:
-    """Interleave ratio: ra A-steps then rb B-steps, repeating.
+    """Interleave ratio vector: r_i steps of op i per super-step, in order.
 
-    (ra, rb) generalizes the paper's thread-partition point d1: it sets how
+    ``Schedule(ratios)`` takes the N-way ratio tuple; ``Schedule(ra, rb)``
+    is the 2-op form (the paper's thread-partition point d1): it sets how
     much of each op is in flight per super-step.  DMA-elision index maps
-    (core/hfuse.py) hold each op's blocks during the other's phase.
+    (core/hfuse.py) hold each op's blocks outside its own phase.
     """
-    ra: int
-    rb: int
+    __slots__ = ("ratios",)
+
+    def __init__(self, *args):
+        if len(args) == 1 and not isinstance(args[0], int):
+            ratios = tuple(int(r) for r in args[0])
+        else:
+            ratios = tuple(int(a) for a in args)
+        if not ratios or any(r < 1 for r in ratios):
+            raise ValueError(f"ratios must be positive ints, got {ratios}")
+        object.__setattr__(self, "ratios", ratios)
+
+    @property
+    def n_ops(self) -> int:
+        return len(self.ratios)
+
+    @property
+    def ra(self) -> int:
+        return self.ratios[0]
+
+    @property
+    def rb(self) -> int:
+        return self.ratios[1]
 
     @property
     def period(self) -> int:
-        return self.ra + self.rb
+        return sum(self.ratios)
+
+    def offsets(self) -> tuple[int, ...]:
+        """Phase start of each op within the super-step."""
+        offs, acc = [], 0
+        for r in self.ratios:
+            offs.append(acc)
+            acc += r
+        return tuple(offs)
+
+    def label(self) -> str:
+        return ":".join(str(r) for r in self.ratios)
+
+    def __eq__(self, other):
+        return isinstance(other, Schedule) and self.ratios == other.ratios
+
+    def __hash__(self):
+        return hash(self.ratios)
+
+    def __repr__(self):
+        return f"Schedule({self.ratios})"
 
 
 @dataclass
@@ -74,37 +117,53 @@ class FusedEstimate:
         return 100.0 * self.gain_vs_native / max(self.t_native, 1e-30)
 
 
-def hfused_cost(a: OpSpec, b: OpSpec, sched: Schedule,
-                vmem_budget: int = VMEM_BUDGET) -> FusedEstimate:
-    """Cost of the interleaved fused kernel under a schedule."""
-    tcA, tmA = a.t_compute, a.t_memory
-    tcB, tmB = b.t_compute, b.t_memory
-    rampA = (tcA + tmA) / max(a.grid, 1)
-    rampB = (tcB + tmB) / max(b.grid, 1)
-    t_native = native_time(a) + native_time(b)          # two launches
+def _as_bundle(args) -> tuple[tuple[OpSpec, ...], Schedule]:
+    """Accept (a, b, sched) legacy positionals or (ops, sched)."""
+    if isinstance(args[0], OpSpec):
+        *ops, sched = args
+        ops = tuple(ops)
+    else:
+        ops, sched = tuple(args[0]), args[1]
+    if sched.n_ops != len(ops):
+        raise ValueError(
+            f"schedule has {sched.n_ops} ratios for {len(ops)} ops")
+    return ops, sched
+
+
+def hfused_cost(*args, vmem_budget: int = VMEM_BUDGET) -> FusedEstimate:
+    """Cost of the interleaved fused bundle under a schedule.
+
+    ``hfused_cost(ops, sched)`` for an N-op bundle, or the legacy 2-op
+    ``hfused_cost(a, b, sched)``.
+    """
+    ops, sched = _as_bundle(args)
+    tcs = [op.t_compute for op in ops]
+    tms = [op.t_memory for op in ops]
+    ramps = [(tc + tm) / max(op.grid, 1)
+             for op, tc, tm in zip(ops, tcs, tms)]
+    t_native = sum(native_time(op) for op in ops)       # N launches
     # vertical/concatenated baseline: one kernel, phases stay serial;
-    # saves one launch + the boundary ramp (paper footnote 1)
-    t_vfused = max(tcA, tmA) + max(tcB, tmB) \
-        + max(rampA, rampB) + LAUNCH_S
+    # saves N-1 launches + all but one boundary ramp (paper footnote 1)
+    t_vfused = sum(max(tc, tm) for tc, tm in zip(tcs, tms)) \
+        + max(ramps) + LAUNCH_S
 
-    # The interleave ratio controls how long the two ops co-execute: with
-    # grids Na, Nb and ratio ra:rb, co-execution lasts until the shorter
-    # op (in super-steps) is exhausted; the tail runs un-overlapped.
-    import math
-    ssA = math.ceil(a.grid / sched.ra)
-    ssB = math.ceil(b.grid / sched.rb)
-    co = min(ssA, ssB)                      # super-steps with both active
-    fA = co / ssA
-    fB = co / ssB
-    # overlapped portion: engines add; tail: leftover of the longer op
-    t_overlap = max(fA * tcA + fB * tcB, fA * tmA + fB * tmB)
-    t_tail = max((1 - fA) * tcA, (1 - fA) * tmA) + \
-        max((1 - fB) * tcB, (1 - fB) * tmB)
+    # The interleave ratios control how long the ops co-execute: with grids
+    # N_i and ratios r_i, full co-execution lasts until the shortest op (in
+    # super-steps) is exhausted; each op's leftover runs progressively less
+    # overlapped — modeled as its un-overlapped tail.
+    ss = [math.ceil(op.grid / r) for op, r in zip(ops, sched.ratios)]
+    co = min(ss)                            # super-steps with all ops active
+    fs = [co / s for s in ss]
+    # overlapped portion: engines add across the bundle; tails: leftovers
+    t_overlap = max(sum(f * tc for f, tc in zip(fs, tcs)),
+                    sum(f * tm for f, tm in zip(fs, tms)))
+    t_tail = sum(max((1 - f) * tc, (1 - f) * tm)
+                 for f, tc, tm in zip(fs, tcs, tms))
 
-    # VMEM: both ops' blocks resident, double-buffered
-    vmem = 2 * (a.vmem_bytes + b.vmem_bytes)
+    # VMEM: every member's blocks resident, double-buffered
+    vmem = 2 * sum(op.vmem_bytes for op in ops)
     vmem_ok = vmem <= vmem_budget
-    ramp_fused = max(rampA, rampB)
+    ramp_fused = max(ramps)
     if vmem_ok:
         t_h = t_overlap + t_tail + ramp_fused + LAUNCH_S
         eff = 1.0
@@ -112,7 +171,8 @@ def hfused_cost(a: OpSpec, b: OpSpec, sched: Schedule,
         # pipelining forfeited: DMA and compute serialize (the "occupancy
         # cliff'); interpolate by how far over budget we are
         over = min(2.0, vmem / vmem_budget)
-        serial = (fA * tcA + fB * tcB) + (fA * tmA + fB * tmB)
+        serial = sum(f * tc for f, tc in zip(fs, tcs)) \
+            + sum(f * tm for f, tm in zip(fs, tms))
         t_h = t_tail + t_overlap + (serial - t_overlap) * (over - 1.0) \
             + ramp_fused + LAUNCH_S
         eff = max(0.0, 2.0 - over)
@@ -127,19 +187,34 @@ def fusion_profitable(a: OpSpec, b: OpSpec) -> bool:
     return a.bound != b.bound
 
 
-def ratio_candidates(a: OpSpec, b: OpSpec,
-                     max_ratio: int = 4096) -> list[Schedule]:
-    """Candidate interleave ratios ~ the paper's d1 sweep in steps of 128.
+def bundle_profitable(ops: Sequence[OpSpec]) -> bool:
+    """N-way scenario test: the bundle must mix bound kinds — an all-
+    compute (or all-memory) bundle only saves launches (Blake256+SHA256)."""
+    return len({op.bound for op in ops}) > 1
 
-    Includes the exact grid-proportional ratio (so wildly imbalanced grids —
+
+def ratio_candidates(*args, max_ratio: int = 4096) -> list[Schedule]:
+    """Candidate interleave ratio vectors ~ the paper's d1 sweep.
+
+    ``ratio_candidates(ops)`` for a bundle or legacy ``ratio_candidates(a, b)``.
+    Includes the grid-proportional vector (so wildly imbalanced grids —
     e.g. a 2048-step decode-attention stream vs a 4-step prefill matmul —
-    co-execute end-to-end) plus neighbours and small fixed ratios."""
-    import math
-    cands = {(1, 1), (2, 1), (1, 2), (4, 1), (1, 4)}
-    g = a.grid / max(b.grid, 1)
-    for r in (g / 2, g, g * 2):
-        if r >= 1:
-            cands.add((min(max_ratio, max(1, round(r))), 1))
-        else:
-            cands.add((1, min(max_ratio, max(1, round(1 / max(r, 1e-9))))))
-    return [Schedule(ra, rb) for ra, rb in sorted(cands)]
+    co-execute end-to-end) plus scaled neighbours and per-op boosts."""
+    if isinstance(args[0], OpSpec):
+        ops = tuple(args)
+    else:
+        ops = tuple(args[0])
+    n = len(ops)
+    cands = {(1,) * n}
+    # boost one op at a time (generalizes (2,1),(1,2),(4,1),(1,4))
+    for i in range(n):
+        for r in (2, 4):
+            v = [1] * n
+            v[i] = r
+            cands.add(tuple(v))
+    # grid-proportional vector and its half/double neighbours
+    gmin = max(1, min(op.grid for op in ops))
+    for s in (0.5, 1.0, 2.0):
+        cands.add(tuple(
+            max(1, min(max_ratio, round(op.grid * s / gmin))) for op in ops))
+    return [Schedule(v) for v in sorted(cands)]

@@ -1,98 +1,123 @@
-"""Generate() — build the horizontally-fused Pallas kernel from two OpSpecs.
+"""Generate() — build the horizontally-fused Pallas kernel from N OpSpecs.
 
-This is the TPU realization of the paper's Fig. 5 algorithm:
+This is the TPU realization of the paper's Fig. 5 algorithm, generalized
+from kernel *pairs* to N-op *bundles*:
 
   paper (CUDA thread space)             here (Pallas grid space)
   -------------------------------------------------------------------------
-  threads [0,d1) run K1, [d1,d0) K2     grid steps interleave A/B per the
-                                        Schedule (ra A-steps : rb B-steps)
+  threads [0,d1) run K1, [d1,d0) K2     grid steps interleave the bundle per
+                                        the Schedule (r_0 : r_1 : ... : r_N)
   branch on threadIdx.x                 @pl.when(phase(program_id))
-  replace threadIdx/blockDim with       op-local step s_A(t), s_B(t) passed
-  tid_1/size_1, tid_2/size_2            to each body
+  replace threadIdx/blockDim with       op-local step s_i(t) passed to each
+  tid_1/size_1, tid_2/size_2            body
   bar.sync id, d partial barriers       not needed: grid steps independent
                                         (see DESIGN.md §2)
   register cap (maxrregcount)           VMEM cap via block-shape choice +
                                         compiler vmem limit
 
-DMA-elision scheduling: during B's phase, every A operand's index map *holds*
-its last value (Pallas skips the copy when the block index is unchanged
-between steps), and vice versa.  Thus while a compute-bound B step occupies
-the MXU, the pipeline prefetches A's next (memory-bound) blocks — the warp-
-scheduler latency hiding of the paper, reconstructed with the only
+DMA-elision scheduling: during any other op's phase, every operand's index
+map *holds* its last value (Pallas skips the copy when the block index is
+unchanged between steps).  Thus while a compute-bound member's step occupies
+the MXU, the pipeline prefetches the memory-bound members' next blocks — the
+warp-scheduler latency hiding of the paper, reconstructed with the only
 latency-hiding machinery a TPU has.
+
+The 2-op entry points (``generate(a, b, sched)``, ``generate_vfused(a, b)``,
+``run_native(a, b)``) remain as thin wrappers over the bundle forms.
 """
 from __future__ import annotations
 
 import math
-from functools import partial
-from typing import Optional
+from typing import Optional, Sequence
 
 import jax
-import jax.numpy as jnp
 from jax.experimental import pallas as pl
+import jax.numpy as jnp
 
 from repro.core.cost_model import Schedule
 from repro.core.op_spec import OpSpec
 
 
-def _phase_fns(a: OpSpec, b: OpSpec, sched: Schedule):
-    ra, rb, period = sched.ra, sched.rb, sched.period
+def _bundle_phase_fns(ops: Sequence[OpSpec], sched: Schedule):
+    """Per-op (step, active) grid functions + total fused step count.
 
-    def a_step(t):
-        s, ph = t // period, t % period
-        idx = s * ra + jnp.minimum(ph, ra - 1)
-        return jnp.clip(idx, 0, a.grid - 1)
+    Within a super-step of ``period`` fused steps, op i owns the phase
+    window [off_i, off_i + r_i).  Outside its window its step index holds
+    (clips to the last block it touched) so Pallas elides the DMAs.
+    """
+    period = sched.period
+    offsets = sched.offsets()
 
-    def a_active(t):
-        s, ph = t // period, t % period
-        return (ph < ra) & (s * ra + ph < a.grid)
+    def make(i):
+        r, off, grid = sched.ratios[i], offsets[i], ops[i].grid
 
-    def b_step(t):
-        s, ph = t // period, t % period
-        idx = jnp.where(ph >= ra, s * rb + (ph - ra), s * rb - 1)
-        return jnp.clip(idx, 0, b.grid - 1)
+        def step(t):
+            s, ph = t // period, t % period
+            p = ph - off
+            # before my window: hold previous super-step's last block;
+            # after it: hold this super-step's last block
+            idx = s * r + jnp.clip(p, -1, r - 1)
+            return jnp.clip(idx, 0, grid - 1)
 
-    def b_active(t):
-        s, ph = t // period, t % period
-        return (ph >= ra) & (s * rb + (ph - ra) < b.grid)
+        def active(t):
+            s, ph = t // period, t % period
+            p = ph - off
+            return (p >= 0) & (p < r) & (s * r + p < grid)
 
-    n_super = max(math.ceil(a.grid / ra), math.ceil(b.grid / rb))
-    return a_step, a_active, b_step, b_active, n_super * period
+        return step, active
+
+    fns = [make(i) for i in range(len(ops))]
+    n_super = max(math.ceil(op.grid / r)
+                  for op, r in zip(ops, sched.ratios))
+    return fns, n_super * period
 
 
-def generate(a: OpSpec, b: OpSpec, sched: Schedule, *,
+def _normalize(ops, b, sched):
+    """Accept generate(ops, sched) or the legacy generate(a, b, sched)."""
+    if isinstance(ops, OpSpec):
+        ops = (ops, b)
+    else:
+        ops, sched = tuple(ops), b if sched is None else sched
+    if sched.n_ops != len(ops):
+        raise ValueError(
+            f"schedule has {sched.n_ops} ratios for {len(ops)} ops")
+    return ops, sched
+
+
+def generate(ops, b=None, sched: Optional[Schedule] = None, *,
              interpret: bool = False, vmem_limit: Optional[int] = None):
-    """Returns fused(*a_inputs, *b_inputs) -> (*a_outputs, *b_outputs)."""
-    a_step, a_active, b_step, b_active, n_steps = _phase_fns(a, b, sched)
+    """Returns fused(*op0_inputs, ..., *opN_inputs) ->
+    (*op0_outputs, ..., *opN_outputs) — one Pallas call for the bundle."""
+    ops, sched = _normalize(ops, b, sched)
+    fns, n_steps = _bundle_phase_fns(ops, sched)
 
-    nia, noa = len(a.inputs), len(a.outputs)
-    nib, nob = len(b.inputs), len(b.outputs)
+    n_ins = [len(op.inputs) for op in ops]
+    n_outs = [len(op.outputs) for op in ops]
+    in_off = [sum(n_ins[:i]) for i in range(len(ops) + 1)]
+    out_off = [sum(n_outs[:i]) for i in range(len(ops) + 1)]
+    n_in_total = in_off[-1]
 
     def fused_kernel(*refs):
         t = pl.program_id(0)
-        a_in = refs[:nia]
-        b_in = refs[nia: nia + nib]
-        a_out = refs[nia + nib: nia + nib + noa]
-        b_out = refs[nia + nib + noa:]
+        for i, op in enumerate(ops):
+            step, active = fns[i]
+            ins = refs[in_off[i]:in_off[i + 1]]
+            outs = refs[n_in_total + out_off[i]:n_in_total + out_off[i + 1]]
 
-        @pl.when(a_active(t))
-        def _():
-            a.body(a_step(t), *a_in, *a_out)
-
-        @pl.when(b_active(t))
-        def _():
-            b.body(b_step(t), *b_in, *b_out)
+            @pl.when(active(t))
+            def _(op=op, step=step, ins=ins, outs=outs):
+                op.body(step(t), *ins, *outs)
 
     def remap(op_step, operand):
         return pl.BlockSpec(operand.block_shape,
                             lambda t, _f=operand.index_map, _s=op_step: _f(_s(t)))
 
-    in_specs = ([remap(a_step, o) for o in a.inputs]
-                + [remap(b_step, o) for o in b.inputs])
-    out_specs = ([remap(a_step, o) for o in a.outputs]
-                 + [remap(b_step, o) for o in b.outputs])
-    out_shape = ([jax.ShapeDtypeStruct(o.shape, o.dtype) for o in a.outputs]
-                 + [jax.ShapeDtypeStruct(o.shape, o.dtype) for o in b.outputs])
+    in_specs = [remap(fns[i][0], o)
+                for i, op in enumerate(ops) for o in op.inputs]
+    out_specs = [remap(fns[i][0], o)
+                 for i, op in enumerate(ops) for o in op.outputs]
+    out_shape = [jax.ShapeDtypeStruct(o.shape, o.dtype)
+                 for op in ops for o in op.outputs]
 
     kwargs = {}
     if vmem_limit and not interpret and jax.default_backend() == "tpu":
@@ -114,19 +139,23 @@ def generate(a: OpSpec, b: OpSpec, sched: Schedule, *,
     )
 
     def fused(*operands):
-        assert len(operands) == nia + nib, (len(operands), nia, nib)
+        assert len(operands) == n_in_total, (len(operands), n_ins)
         outs = call(*operands)
         return tuple(outs) if isinstance(outs, (list, tuple)) else (outs,)
 
     fused.n_steps = n_steps
     fused.schedule = sched
+    fused.ops = ops
     return fused
 
 
-def generate_vfused(a: OpSpec, b: OpSpec, **kw):
-    """Concatenated (vertical-style) baseline: all A steps, then all B steps —
-    one kernel, no interleaving.  Same machinery, degenerate schedule."""
-    return generate(a, b, Schedule(a.grid, b.grid), **kw)
+def generate_vfused(*ops, **kw):
+    """Concatenated (vertical-style) baseline: all of op 0's steps, then all
+    of op 1's, ... — one kernel, no interleaving.  Same machinery,
+    degenerate schedule.  Accepts OpSpecs positionally or one sequence."""
+    if len(ops) == 1 and not isinstance(ops[0], OpSpec):
+        ops = tuple(ops[0])
+    return generate(ops, Schedule(tuple(op.grid for op in ops)), **kw)
 
 
 def run_single(op: OpSpec, *, interpret: bool = False):
@@ -150,32 +179,21 @@ def run_single(op: OpSpec, *, interpret: bool = False):
     return run
 
 
-def run_native(a: OpSpec, b: OpSpec, *, interpret: bool = False):
-    """The 'native' baseline: two separate pallas_calls (two launches).
+def run_native(*ops, interpret: bool = False):
+    """The 'native' baseline: one pallas_call per op (N launches).
 
-    NOTE: on a TPU core there is no stream concurrency — two kernels
-    serialize — which is why horizontal fusion is the *only* way two ops
+    NOTE: on a TPU core there is no stream concurrency — kernels
+    serialize — which is why horizontal fusion is the *only* way N ops
     co-execute (DESIGN.md §8.5)."""
-    def one(op):
-        def kernel(*refs):
-            t = pl.program_id(0)
-            op.body(t, *refs)
-        return pl.pallas_call(
-            kernel,
-            grid=(op.grid,),
-            in_specs=[pl.BlockSpec(o.block_shape, o.index_map) for o in op.inputs],
-            out_specs=[pl.BlockSpec(o.block_shape, o.index_map) for o in op.outputs],
-            out_shape=[jax.ShapeDtypeStruct(o.shape, o.dtype) for o in op.outputs],
-            interpret=interpret,
-        )
-
-    ca, cb = one(a), one(b)
+    if len(ops) == 1 and not isinstance(ops[0], OpSpec):
+        ops = tuple(ops[0])
+    calls = [run_single(op, interpret=interpret) for op in ops]
 
     def native(*operands):
-        outs_a = ca(*operands[:len(a.inputs)])
-        outs_b = cb(*operands[len(a.inputs):])
-        outs_a = outs_a if isinstance(outs_a, (list, tuple)) else [outs_a]
-        outs_b = outs_b if isinstance(outs_b, (list, tuple)) else [outs_b]
-        return (*outs_a, *outs_b)
+        outs, off = [], 0
+        for op, call in zip(ops, calls):
+            outs.extend(call(*operands[off:off + len(op.inputs)]))
+            off += len(op.inputs)
+        return tuple(outs)
 
     return native

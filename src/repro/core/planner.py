@@ -1,25 +1,31 @@
 """Graph-level fusion planner — decides WHICH independent ops to fuse.
 
-The paper fuses kernels that happen to be co-resident (different CUDA
-streams, e.g. Batchnorm during training + Hist from a monitoring pass).  In
-a framework we know the whole op graph, so the planner:
+The paper fuses kernel *pairs* that happen to be co-resident (different
+CUDA streams, e.g. Batchnorm during training + Hist from a monitoring
+pass).  In a framework we know the whole op graph, so the planner builds
+N-way *bundles*:
 
   1. classifies every op by roofline bound (compute vs memory),
   2. builds the dependency closure (never fuse ops on a dependent path),
-  3. greedily pairs memory-bound with compute-bound ops whose native times
-     are closest (the paper's Fig. 7: gains peak at execution-time ratio ~1),
-  4. runs the autotuner on each pair and keeps pairs with predicted gain
+  3. seeds a bundle with the largest unused memory-bound op and its
+     closest-native-time compute partner (the paper's Fig. 7: gains peak
+     at execution-time ratio ~1),
+  4. greedily grows the bundle up to ``max_ways`` members, admitting the
+     op with the largest *marginal* predicted gain — an op only joins if
+     co-scheduling it beats launching it natively (bin-packing by
+     complementary roofline bound: the cost model only rewards members
+     that ride the bundle's idle engine),
+  5. runs the autotuner on each bundle and keeps those with predicted gain
      above a threshold — the paper's negative results (Blake256+SHA256
      loses) become planner rejections.
 """
 from __future__ import annotations
 
-import dataclasses
-from dataclasses import dataclass, field
-from typing import Optional, Sequence
+from dataclasses import dataclass
+from typing import Sequence
 
 from repro.core import autotuner
-from repro.core.cost_model import fusion_profitable
+from repro.core.cost_model import native_time
 from repro.core.op_spec import OpSpec
 
 
@@ -31,22 +37,30 @@ class GraphOp:
 
 @dataclass
 class FusionDecision:
-    a: str
-    b: str
+    members: tuple[str, ...]
     result: autotuner.SearchResult
     predicted_speedup_pct: float
+
+    # 2-op compatibility accessors
+    @property
+    def a(self) -> str:
+        return self.members[0]
+
+    @property
+    def b(self) -> str:
+        return self.members[1]
 
 
 @dataclass
 class FusionPlan:
     fused: list[FusionDecision]
     singles: list[str]
-    rejected: list[tuple[str, str, str]]     # (a, b, reason)
+    rejected: list[tuple[str, str, str]]     # (members..., last, reason)
 
     def summary(self) -> list[dict]:
         rows = [{
-            "pair": f"{d.a}+{d.b}",
-            "schedule": f"{d.result.best.sched.ra}:{d.result.best.sched.rb}",
+            "pair": "+".join(d.members),
+            "schedule": d.result.best.sched.label(),
             "vmem_cap": d.result.best.vmem_cap,
             "predicted_speedup_pct": round(d.predicted_speedup_pct, 1),
         } for d in self.fused]
@@ -74,14 +88,33 @@ def _reachable(ops: dict[str, GraphOp]) -> dict[str, frozenset]:
     return memo
 
 
-def independent(ops: dict[str, GraphOp], a: str, b: str) -> bool:
-    clo = _reachable(ops)
+def independent(ops: dict[str, GraphOp], a: str, b: str,
+                clo: dict[str, frozenset] | None = None) -> bool:
+    clo = clo if clo is not None else _reachable(ops)
     return b not in clo[a] and a not in clo[b]
 
 
+def _independent_of_all(clo: dict[str, frozenset], bundle: Sequence[OpSpec],
+                        cand: OpSpec) -> bool:
+    return all(cand.name not in clo[m.name] and m.name not in clo[cand.name]
+               for m in bundle)
+
+
+def _bundle_cost(bundle: Sequence[OpSpec]) -> float:
+    """Best predicted fused time for a bundle (cost-model autotune)."""
+    return autotuner.search(tuple(bundle)).best.est.t_hfused
+
+
 def plan(graph: Sequence[GraphOp], *, min_gain_pct: float = 2.0,
-         allow_same_bound: bool = False) -> FusionPlan:
+         allow_same_bound: bool = False, max_ways: int = 2) -> FusionPlan:
+    """Build ≤``max_ways``-way fusion bundles over the independent ops.
+
+    ``max_ways=2`` reproduces the paper's pairwise planning; raise it to
+    let complementary ops pile into larger bundles when the cost model
+    predicts a marginal win for each admission.
+    """
     ops = {g.op.name: g for g in graph}
+    clo = _reachable(ops)
     mem = sorted((g.op for g in graph if g.op.bound == "memory"),
                  key=lambda o: -o.t_native)
     comp = sorted((g.op for g in graph if g.op.bound == "compute"),
@@ -96,21 +129,45 @@ def plan(graph: Sequence[GraphOp], *, min_gain_pct: float = 2.0,
             continue
         # closest-native-time compute partner (paper: ratio ~1 is best)
         partners = [c for c in comp if c.name not in used
-                    and independent(ops, m.name, c.name)]
+                    and independent(ops, m.name, c.name, clo)]
         if not partners and allow_same_bound:
             partners = [c.op for c in graph
                         if c.op.name not in used and c.op.name != m.name
-                        and independent(ops, m.name, c.op.name)]
+                        and independent(ops, m.name, c.op.name, clo)]
         if not partners:
             continue
         c = min(partners, key=lambda o: abs(o.t_native - m.t_native))
-        res = autotuner.search((m, c))
+        bundle = [m, c]
+
+        # grow: admit the op with the largest marginal predicted gain —
+        # t_hfused(bundle ∪ {x}) must beat t_hfused(bundle) + native(x)
+        t_now = _bundle_cost(bundle)
+        while len(bundle) < max_ways:
+            pool = [g.op for g in graph
+                    if g.op.name not in used
+                    and g.op.name not in {b.name for b in bundle}
+                    and _independent_of_all(clo, bundle, g.op)]
+            if not pool:
+                break
+            scored = [(t_now + native_time(x) - _bundle_cost(bundle + [x]), x)
+                      for x in pool]
+            marginal, x = max(scored, key=lambda s: s[0])
+            # a material fraction of x's native time must vanish — launch-
+            # overhead crumbs alone don't justify VMEM pressure (this is
+            # what keeps same-bound ops out: they add to the busy engine)
+            if marginal <= (min_gain_pct / 100.0) * native_time(x):
+                break
+            bundle.append(x)
+            t_now = t_now + native_time(x) - marginal
+
+        res = autotuner.search(tuple(bundle))
         gain = res.best.est.speedup_pct()
+        names = tuple(b.name for b in bundle)
         if gain >= min_gain_pct:
-            fused.append(FusionDecision(m.name, c.name, res, gain))
-            used |= {m.name, c.name}
+            fused.append(FusionDecision(names, res, gain))
+            used |= set(names)
         else:
-            rejected.append((m.name, c.name,
+            rejected.append(("+".join(names[:-1]), names[-1],
                              f"predicted gain {gain:.1f}% < {min_gain_pct}%"))
 
     singles = [g.op.name for g in graph if g.op.name not in used]

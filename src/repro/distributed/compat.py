@@ -1,0 +1,43 @@
+"""jax API-drift shims for the distributed layer.
+
+``shard_map`` moved and changed its knob names across jax releases:
+
+  jax >= 0.6           jax.shard_map(f, mesh=, in_specs=, out_specs=,
+                                     axis_names=, check_vma=)
+  jax 0.4.x - 0.5.x    jax.experimental.shard_map.shard_map(
+                           f, mesh=, in_specs=, out_specs=,
+                           check_rep=, auto=)
+
+The two parameterizations are duals: new-style ``axis_names`` lists the
+*manual* axes, old-style ``auto`` lists the non-manual remainder;
+``check_vma`` renamed ``check_rep``.  Callers in this package use the
+new-style vocabulary and this shim translates when running on an older
+jax (the container pins 0.4.37).
+
+Old-jax caveat: 0.4.x partial-auto shard_map cannot lower this package's
+bodies (``axis_index`` hits the SPMD partitioner's PartitionId ambiguity;
+``ppermute``/``psum`` trip an XLA ``IsManualSubgroup`` check), so the
+fallback goes *fully manual* over every mesh axis instead.  Semantics are
+preserved — specs that never mention the extra axes mean "replicated"
+under both readings — but the region's interior loses automatic SPMD
+partitioning over the non-manual axes (acceptable: these regions are
+collective plumbing, not FLOP-heavy interiors).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+
+def shard_map(f, *, mesh, in_specs, out_specs,
+              axis_names: Optional[set] = None, check_vma: bool = True):
+    if hasattr(jax, "shard_map"):
+        manual = frozenset(axis_names) if axis_names is not None \
+            else frozenset(mesh.axis_names)
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, axis_names=manual,
+                             check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=check_vma)

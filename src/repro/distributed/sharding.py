@@ -192,7 +192,21 @@ def _manual_axes() -> frozenset:
         return frozenset(n for n, t in zip(am.axis_names, am.axis_types)
                          if str(t) == "Manual")
     except Exception:
+        pass
+    # jax 0.4.x: no abstract mesh — a shard_map-manual axis is bound in the
+    # trace's axis env exactly like a pmap axis, so probe each mesh axis
+    mesh = _CTX.mesh
+    if mesh is None:
         return frozenset()
+    from jax._src import core as _core
+    manual = set()
+    for name in mesh.axis_names:
+        try:
+            _core.axis_frame(name)
+            manual.add(name)
+        except Exception:
+            continue
+    return frozenset(manual)
 
 
 def shard(x: jax.Array, logical: Sequence[Optional[str]]) -> jax.Array:

@@ -65,7 +65,8 @@ def adamw_flat(p, g, m, v, scalars, *, b1=0.9, b2=0.95, eps=1e-8, wd=0.1,
 
 
 def adamw_op(R: int, dtype=jnp.bfloat16, bm: int = 1024,
-             b1=0.9, b2=0.95, eps=1e-8, wd=0.1) -> OpSpec:
+             b1=0.9, b2=0.95, eps=1e-8, wd=0.1,
+             name: str | None = None) -> OpSpec:
     """Fusible form of the flat update (grid over row blocks)."""
     assert R % bm == 0
     blk = lambda s: (s, 0)
@@ -78,7 +79,7 @@ def adamw_op(R: int, dtype=jnp.bfloat16, bm: int = 1024,
     itemsize = jnp.dtype(dtype).itemsize
     C = LANES
     return OpSpec(
-        name=f"adamw_{R}x{C}", grid=R // bm, body=body,
+        name=name or f"adamw_{R}x{C}", grid=R // bm, body=body,
         inputs=(Operand((1, C), jnp.float32, (1, C), const),
                 Operand((R, C), dtype, (bm, C), blk),
                 Operand((R, C), dtype, (bm, C), blk),
@@ -90,6 +91,78 @@ def adamw_op(R: int, dtype=jnp.bfloat16, bm: int = 1024,
         flops=12.0 * R * C,
         hbm_bytes=R * C * (2 * itemsize + 3 * 4 + itemsize + 2 * 4),
         tag="framework:adamw")
+
+
+# ---------------------------------------------------------------------------
+# N-way multi-tensor path: one OpSpec per tensor, one fused Pallas launch
+# ---------------------------------------------------------------------------
+def _flatten_leaf(x, row_multiple: int = 1):
+    """One leaf -> zero-padded (R, 128) buffer; R a multiple of row_multiple."""
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    R = math.ceil(n / LANES)
+    R = math.ceil(R / row_multiple) * row_multiple
+    pad = R * LANES - n
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
+    return flat.reshape(R, LANES), n
+
+
+def _unflatten_leaf(flat2d, n, like):
+    return flat2d.reshape(-1)[:n].reshape(like.shape).astype(like.dtype)
+
+
+def multi_tensor_adamw(params, grads, m, v, scalars, *, b1=0.9, b2=0.95,
+                       eps=1e-8, wd=0.1, bm: int = 1024,
+                       interpret: bool = False):
+    """All per-tensor updates as ONE N-way horizontally-fused launch.
+
+    Unlike ``adamw_flat`` (which concatenates every tensor into a single
+    buffer — one op, one grid), this keeps each tensor its own OpSpec and
+    lets core/hfuse interleave the N update streams in a single kernel:
+    the multi-tensor-apply shape that lets the planner later splice other
+    ops (e.g. a dW matmul) into the same bundle.  Returns trees
+    (new_params, new_m, new_v).
+    """
+    from repro.core import hfuse
+    from repro.core.cost_model import Schedule
+
+    leaves_p, treedef = jax.tree.flatten(params)
+    leaves_g = treedef.flatten_up_to(grads)
+    leaves_m = treedef.flatten_up_to(m)
+    leaves_v = treedef.flatten_up_to(v)
+
+    ops, operands, ns = [], [], []
+    for i, (lp, lg, lm, lv) in enumerate(
+            zip(leaves_p, leaves_g, leaves_m, leaves_v)):
+        # pad each leaf's rows to a multiple of its block size so big
+        # tensors keep a bm-row block (one whole-tensor block would blow
+        # the VMEM budget); tiny tensors get a single block of their size
+        n = math.prod(lp.shape) if lp.shape else 1
+        bm_i = min(bm, math.ceil(n / LANES))
+        p2, n = _flatten_leaf(lp, row_multiple=bm_i)
+        g2, _ = _flatten_leaf(lg.astype(lp.dtype), row_multiple=bm_i)
+        m2, _ = _flatten_leaf(lm.astype(jnp.float32), row_multiple=bm_i)
+        v2, _ = _flatten_leaf(lv.astype(jnp.float32), row_multiple=bm_i)
+        R = p2.shape[0]
+        ops.append(adamw_op(R=R, dtype=lp.dtype, bm=bm_i,
+                            b1=b1, b2=b2, eps=eps, wd=wd,
+                            name=f"adamw_t{i}_{R}x{LANES}"))
+        operands += [scalars, p2, g2, m2, v2]
+        ns.append(n)
+
+    fused = hfuse.generate(ops, Schedule((1,) * len(ops)),
+                           interpret=interpret)
+    outs = fused(*operands)
+    new_p = [_unflatten_leaf(outs[3 * i], ns[i], leaves_p[i])
+             for i in range(len(ops))]
+    new_m = [_unflatten_leaf(outs[3 * i + 1], ns[i], leaves_m[i])
+             for i in range(len(ops))]
+    new_v = [_unflatten_leaf(outs[3 * i + 2], ns[i], leaves_v[i])
+             for i in range(len(ops))]
+    return (jax.tree.unflatten(treedef, new_p),
+            jax.tree.unflatten(treedef, new_m),
+            jax.tree.unflatten(treedef, new_v))
 
 
 # ---------------------------------------------------------------------------

@@ -81,23 +81,25 @@ def moe_gmm(xe, w_in, w_out, act="silu", bc=128):
 
 
 def hfused_adamw(params, grads, m, v, *, lr, b1, b2, eps, wd, bc1, bc2):
-    """All per-tensor updates as ONE flat Pallas launch (paper §4.3 form)."""
-    p2, n = adam_k.flatten_for_adam(params)
-    g2, _ = adam_k.flatten_for_adam(grads)
-    m2, _ = adam_k.flatten_for_adam(m)
-    v2, _ = adam_k.flatten_for_adam(v)
-    scal = jnp.zeros((1, adam_k.LANES), jnp.float32)
-    scal = scal.at[0, 0].set(lr).at[0, 1].set(bc1).at[0, 2].set(bc2)
+    """All per-tensor updates as ONE Pallas launch (paper §4.3 form).
+
+    Pallas/interpret modes run the N-way multi-tensor bundle (one OpSpec
+    per tensor, horizontally fused by core/hfuse); ref mode applies the
+    oracle update leaf-wise.
+    """
     mode = _mode()
     if mode == "ref":
-        po, mo, vo = ref.adamw(p2, g2, m2.astype(jnp.float32),
-                               v2.astype(jnp.float32), lr=lr, b1=b1, b2=b2,
-                               eps=eps, wd=wd, bc1=bc1, bc2=bc2)
-    else:
-        po, mo, vo = adam_k.adamw_flat(p2, g2, m2.astype(jnp.float32),
-                                       v2.astype(jnp.float32), scal,
-                                       b1=b1, b2=b2, eps=eps, wd=wd,
-                                       interpret=(mode == "interpret"))
-    return (adam_k.unflatten_from_adam(po, n, params),
-            adam_k.unflatten_from_adam(mo, n, m),
-            adam_k.unflatten_from_adam(vo, n, v))
+        lp, treedef = jax.tree.flatten(params)
+        outs = [ref.adamw(p, g, mm.astype(jnp.float32),
+                          vv.astype(jnp.float32), lr=lr, b1=b1, b2=b2,
+                          eps=eps, wd=wd, bc1=bc1, bc2=bc2)
+                for p, g, mm, vv in zip(lp, treedef.flatten_up_to(grads),
+                                        treedef.flatten_up_to(m),
+                                        treedef.flatten_up_to(v))]
+        return tuple(jax.tree.unflatten(treedef, [o[k] for o in outs])
+                     for k in range(3))
+    scal = jnp.zeros((1, adam_k.LANES), jnp.float32)
+    scal = scal.at[0, 0].set(lr).at[0, 1].set(bc1).at[0, 2].set(bc2)
+    return adam_k.multi_tensor_adamw(params, grads, m, v, scal,
+                                     b1=b1, b2=b2, eps=eps, wd=wd,
+                                     interpret=(mode == "interpret"))

@@ -248,3 +248,41 @@ def paper_pairs() -> list[tuple[str, str]]:
     pairs = [(a, b) for i, a in enumerate(dl) for b in dl[i + 1:]]
     pairs += [(a, b) for i, a in enumerate(cr) for b in cr[i + 1:]]
     return pairs
+
+
+def paper_triples() -> list[tuple[str, str, str]]:
+    """N-way extension of Fig. 7: 3-way bundles mixing bound kinds.
+
+    Two memory-bound streams sharing one compute-bound partner (and the
+    converse) — the co-scheduling shape the pairwise paper cannot express.
+    The all-compute triple is the deliberate negative (Blake256+SHA256
+    generalized): it should win ~nothing and the planner should reject it.
+    """
+    return [
+        ("maxpool", "upsample", "sha_like"),       # 2 mem + 1 compute
+        ("ethash_like", "hist", "blake_like"),     # mem + mixed + compute
+        ("bnstats", "im2col", "blake2b_like"),     # 2 mem + 1 compute
+        ("sha_like", "blake_like", "blake2b_like"),  # negative control
+    ]
+
+
+# reduced-size kwargs shared by tests and benchmark smoke/numerics checks
+# (interpret mode is O(grid) slow)
+SMALL_KW = dict(
+    maxpool=dict(R=256, C=128, bm=64), bnstats=dict(R=256, C=128, bm=64),
+    upsample=dict(R=256, C=128, bm=64), im2col=dict(R=256, C=128, bm=64),
+    hist=dict(R=256, C=128, bm=32), ethash_like=dict(R_dag=512, bm=128),
+    sha_like=dict(R=256, bm=64), blake_like=dict(R=256, bm=64),
+    blake2b_like=dict(R=256, bm=64),
+)
+
+
+def make_bundle(names, small: bool = False):
+    """Instantiate a named bundle: ([OpSpec], [make_inputs], [ref_fn])."""
+    ops, mks, refs = [], [], []
+    for n in names:
+        op, mk, rf = ALL_KERNELS[n](**(SMALL_KW[n] if small else {}))
+        ops.append(op)
+        mks.append(mk)
+        refs.append(rf)
+    return ops, mks, refs

@@ -6,6 +6,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis",
+                    reason="property tests need hypothesis (see "
+                           "requirements.txt); non-property N-way coverage "
+                           "lives in test_hfuse_nway.py")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import autotuner, hfuse, planner

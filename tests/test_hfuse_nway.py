@@ -1,0 +1,215 @@
+"""N-way horizontal fusion bundles: generate()/cost-model/autotuner/planner
+over Sequence[OpSpec], the 2-op compatibility surface, and the N-way
+multi-tensor Adam path.  (Deliberately hypothesis-free so this coverage
+survives environments without the property-testing extra.)"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import autotuner, hfuse, planner
+from repro.core.cost_model import (Schedule, bundle_profitable, hfused_cost,
+                                   native_time, ratio_candidates)
+from repro.kernels import paper_suite as ps
+
+
+def _bundle(names):
+    return ps.make_bundle(names, small=True)
+
+
+def _check_bundle(names, sched, tol=2e-3):
+    """Fused bundle output == each member's standalone run_single output."""
+    ops, mks, _ = _bundle(names)
+    xs = [mk(jax.random.PRNGKey(i)) for i, mk in enumerate(mks)]
+    fused = hfuse.generate(ops, sched, interpret=True)
+    outs = fused(*[a for x in xs for a in x])
+    off = 0
+    for op, x in zip(ops, xs):
+        want = hfuse.run_single(op, interpret=True)(*x)
+        for o in want:
+            np.testing.assert_allclose(np.asarray(outs[off], np.float32),
+                                       np.asarray(o, np.float32),
+                                       rtol=tol, atol=tol)
+            off += 1
+    assert off == len(outs)
+
+
+@pytest.mark.parametrize("ratios", [(1, 1, 1), (2, 1, 3), (4, 2, 1)])
+def test_three_way_fused_matches_run_single(ratios):
+    _check_bundle(("maxpool", "upsample", "sha_like"), Schedule(ratios))
+
+
+@pytest.mark.parametrize("names", ps.paper_triples())
+def test_all_registered_triples_fuse_correctly(names):
+    _check_bundle(names, Schedule((1,) * len(names)))
+
+
+def test_four_way_bundle():
+    _check_bundle(("maxpool", "bnstats", "upsample", "sha_like"),
+                  Schedule((1, 2, 1, 2)))
+
+
+def test_two_op_api_unchanged():
+    """The legacy pairwise surface: generate(a, b, sched), Schedule(ra, rb),
+    generate_vfused(a, b), run_native(a, b)."""
+    opA, mkA, refA = ps.make_upsample(R=256, C=128, bm=64)
+    opB, mkB, refB = ps.make_sha_like(R=256, bm=64)
+    xa, xb = mkA(jax.random.PRNGKey(0)), mkB(jax.random.PRNGKey(1))
+    sched = Schedule(2, 1)
+    assert (sched.ra, sched.rb, sched.period) == (2, 1, 3)
+    fused = hfuse.generate(opA, opB, sched, interpret=True)
+    outs = fused(*xa, *xb)
+    np.testing.assert_allclose(np.asarray(outs[0]), np.asarray(refA(*xa)),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(outs[1]), np.asarray(refB(*xb)),
+                               rtol=1e-4, atol=1e-4)
+    vf = hfuse.generate_vfused(opA, opB, interpret=True)
+    np.testing.assert_allclose(np.asarray(vf(*xa, *xb)[0]),
+                               np.asarray(refA(*xa)), rtol=1e-4, atol=1e-4)
+    nat = hfuse.run_native(opA, opB, interpret=True)
+    np.testing.assert_allclose(np.asarray(nat(*xa, *xb)[1]),
+                               np.asarray(refB(*xb)), rtol=1e-4, atol=1e-4)
+
+
+def test_schedule_forms_equivalent():
+    assert Schedule(3, 2) == Schedule((3, 2))
+    assert Schedule((1, 2, 3)).offsets() == (0, 1, 3)
+    assert Schedule((1, 2, 3)).period == 6
+    with pytest.raises(ValueError):
+        Schedule((1, 0))
+
+
+def test_cost_model_nway_reduces_to_pairwise():
+    a, _, _ = ps.make_ethash_like(R_dag=8192, bm=256)
+    b, _, _ = ps.make_blake_like(R=2048, bm=256)
+    for ra, rb in [(1, 1), (3, 2), (8, 1)]:
+        e2 = hfused_cost(a, b, Schedule(ra, rb))
+        en = hfused_cost([a, b], Schedule((ra, rb)))
+        assert e2.t_hfused == en.t_hfused
+        assert e2.t_native == en.t_native
+        assert e2.vmem_bytes == en.vmem_bytes
+
+
+def test_cost_model_three_way_bounds():
+    """Engine-sum lower bound and serial upper bound hold for bundles."""
+    ops, _, _ = _bundle(("ethash_like", "hist", "blake_like"))
+    est = hfused_cost(ops, Schedule((1, 1, 1)))
+    lower = max(sum(o.t_compute for o in ops), sum(o.t_memory for o in ops))
+    if est.vmem_ok:
+        assert est.t_hfused >= lower * 0.999
+        assert est.t_hfused <= sum(native_time(o) for o in ops) * 1.001
+
+
+def test_bundle_profitability_scenarios():
+    mem, _, _ = ps.make_upsample()
+    mem2, _, _ = ps.make_maxpool()
+    c1, _, _ = ps.make_sha_like()
+    c2, _, _ = ps.make_blake_like()
+    assert bundle_profitable([mem, mem2, c1])
+    assert not bundle_profitable([c1, c2])        # Blake256+SHA256, N-way
+    # the mixed triple gains from genuine engine overlap (beyond the launch
+    # amortization any one-kernel form gets); the all-compute triple gains
+    # NOTHING from interleaving — the paper's §IV-C negative, N-way
+    c3, _, _ = ps.make_blake2b_like()
+    mixed = hfused_cost([mem, mem2, c1], Schedule((1, 1, 1)))
+    same = hfused_cost([c1, c2, c3], Schedule((1, 1, 1)))
+    assert mixed.gain_vs_vfused > 0
+    assert same.gain_vs_vfused <= 1e-12
+    assert mixed.speedup_pct() > 5.0
+
+
+def test_ratio_candidates_nway():
+    ops, _, _ = _bundle(("maxpool", "upsample", "sha_like"))
+    cands = ratio_candidates(ops)
+    assert all(c.n_ops == 3 for c in cands)
+    assert Schedule((1, 1, 1)) in cands
+    assert len(cands) >= 4
+    # legacy two-positional form still works
+    pair = ratio_candidates(ops[0], ops[2])
+    assert all(c.n_ops == 2 for c in pair)
+
+
+def test_autotuner_searches_bundles():
+    ops, mks, _ = _bundle(("ethash_like", "hist", "blake_like"))
+    res = autotuner.search(tuple(ops))
+    assert res.best.est.t_hfused == min(c.est.t_hfused for c in res.log)
+    assert len(res.log) >= 4
+    assert res.ops == tuple(ops)
+    fused = res.build(interpret=True)
+    xs = [mk(jax.random.PRNGKey(i)) for i, mk in enumerate(mks)]
+    outs = fused(*[a for x in xs for a in x])
+    want = hfuse.run_single(ops[0], interpret=True)(*xs[0])
+    np.testing.assert_allclose(np.asarray(outs[0]), np.asarray(want[0]),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_planner_emits_three_way_bundle():
+    """A graph of 2 memory + 2 compute ops packs into a ≥3-way bundle when
+    allowed, and the bundle mixes bound kinds."""
+    graph = []
+    for f in (ps.make_ethash_like, ps.make_upsample, ps.make_sha_like,
+              ps.make_blake_like):
+        op, _, _ = f()
+        graph.append(planner.GraphOp(op))
+    plan = planner.plan(graph, max_ways=3)
+    widths = [len(d.members) for d in plan.fused]
+    assert max(widths) >= 3
+    big = next(d for d in plan.fused if len(d.members) >= 3)
+    bounds = {op.op.bound for op in graph if op.op.name in big.members}
+    assert bounds == {"compute", "memory"}
+    assert big.result.best.sched.n_ops == len(big.members)
+
+
+def test_planner_pairwise_default_unchanged():
+    graph = []
+    for f in (ps.make_ethash_like, ps.make_upsample, ps.make_sha_like,
+              ps.make_blake_like):
+        op, _, _ = f()
+        graph.append(planner.GraphOp(op))
+    plan = planner.plan(graph)                     # max_ways defaults to 2
+    assert all(len(d.members) == 2 for d in plan.fused)
+    assert {d.a for d in plan.fused} | {d.b for d in plan.fused} >= \
+        {"ethash_like", "upsample"}
+
+
+def test_planner_bundle_respects_dependencies():
+    a, _, _ = ps.make_upsample()
+    b, _, _ = ps.make_maxpool()
+    c, _, _ = ps.make_sha_like()
+    g = [planner.GraphOp(a), planner.GraphOp(c, deps=frozenset({a.name})),
+         planner.GraphOp(b)]
+    plan = planner.plan(g, max_ways=3)
+    for d in plan.fused:
+        assert not ({a.name, c.name} <= set(d.members))
+
+
+def test_multi_tensor_adam_nway():
+    """Each tensor its own OpSpec, one fused launch, matches leaf refs."""
+    from repro.kernels import ops as kops
+    from repro.kernels import ref
+    kops.force("interpret")
+    try:
+        params = {"w": jax.random.normal(jax.random.PRNGKey(0), (50, 7)),
+                  "b": jax.random.normal(jax.random.PRNGKey(1), (33,)),
+                  "e": {"t": jax.random.normal(jax.random.PRNGKey(2), (260,))}}
+        grads = jax.tree.map(lambda p: p * 0.02 + 0.003, params)
+        m = jax.tree.map(lambda p: jnp.full_like(p, 0.01), params)
+        v = jax.tree.map(lambda p: jnp.full_like(p, 0.04), params)
+        kw = dict(lr=3e-3, b1=0.9, b2=0.95, eps=1e-8, wd=0.1,
+                  bc1=0.2, bc2=0.1)
+        newp, newm, newv = kops.hfused_adamw(params, grads, m, v, **kw)
+        flat_new, _ = jax.tree.flatten((newp, newm, newv))
+        assert all(jnp.all(jnp.isfinite(l)) for l in flat_new)
+        lp, td = jax.tree.flatten(params)
+        for i, (p, g, mm, vv) in enumerate(zip(
+                lp, td.flatten_up_to(grads), td.flatten_up_to(m),
+                td.flatten_up_to(v))):
+            wp, wm, wv = ref.adamw(p, g, mm, vv, **kw)
+            np.testing.assert_allclose(
+                np.asarray(td.flatten_up_to(newp)[i]), np.asarray(wp),
+                rtol=5e-6, atol=1e-8)
+            np.testing.assert_allclose(
+                np.asarray(td.flatten_up_to(newm)[i]), np.asarray(wm),
+                rtol=5e-6, atol=1e-8)
+    finally:
+        kops.force(None)

@@ -88,7 +88,14 @@ def test_moe_gmm(E, C, d, f, act, rng):
 
 
 def test_hfused_adam_matches_per_tensor(rng):
-    """One flat fused launch == N per-tensor reference updates."""
+    """One N-way fused multi-tensor launch == N per-tensor reference updates.
+
+    Tolerance is a few f32 ULPs, not bitwise: the kernel takes lr/bc1/bc2 as
+    *runtime* scalars (an LR schedule must not trigger a recompile every
+    step), while the oracle bakes them as Python constants — XLA strength-
+    reduces division-by-constant to reciprocal multiplies, a 1-2 ULP rewrite
+    the runtime-scalar path cannot reproduce.
+    """
     params = {"w1": jax.random.normal(rng, (37, 11), jnp.float32),
               "w2": {"a": jax.random.normal(rng, (130,), jnp.float32)}}
     grads = jax.tree.map(lambda p: p * 0.03 + 0.01, params)
@@ -103,8 +110,8 @@ def test_hfused_adam_matches_per_tensor(rng):
             return t
         wp, wm, wv = ref.adamw(get(params), get(grads), get(m), get(v), **kw)
         np.testing.assert_allclose(np.asarray(get(newp)), np.asarray(wp),
-                                   rtol=1e-6)
+                                   rtol=5e-6, atol=1e-8)
         np.testing.assert_allclose(np.asarray(get(newm)), np.asarray(wm),
-                                   rtol=1e-6)
+                                   rtol=5e-6, atol=1e-8)
         np.testing.assert_allclose(np.asarray(get(newv)), np.asarray(wv),
-                                   rtol=1e-6)
+                                   rtol=5e-6, atol=1e-8)

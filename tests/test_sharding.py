@@ -9,6 +9,10 @@ import textwrap
 from pathlib import Path
 
 import pytest
+
+pytest.importorskip("hypothesis",
+                    reason="property tests need hypothesis (see "
+                           "requirements.txt)")
 from hypothesis import given, settings, strategies as st
 
 SRC = str(Path(__file__).resolve().parents[1] / "src")
