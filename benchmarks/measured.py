@@ -1,0 +1,80 @@
+"""Measured-mode autotuning report — predicted vs measured per bundle.
+
+  PYTHONPATH=src python -m benchmarks.measured [--backend interpret|device]
+
+For every registered paper_suite triple, run the two-stage measured search
+(``autotuner.search(measure=...)``) and emit
+``BENCH_measured_<backend>.json``: per-bundle best schedule, cost-model
+prediction, measurement, their delta, and the search-economics columns
+(measure() invocations vs the exhaustive lattice size — the paper's Main()
+loop would have profiled the whole lattice).  CI runs this in interpret
+mode on every push (`benchmarks/run.py --smoke --measure interpret`) and
+uploads the JSON as a build artifact, so the perf trajectory accumulates.
+"""
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+
+def run(backend: str = "interpret", *, small: bool = True,
+        out_path: str | None = None) -> dict:
+    from repro.core import autotuner
+    from repro.core.timing import make_measure
+    from repro.kernels import paper_suite as ps
+
+    measure = make_measure(backend, execute=(backend == "interpret" and small))
+    calls = [0]
+    base_measure = measure
+
+    def counted(fused, *ops):
+        calls[0] += 1
+        return base_measure(fused, *ops)
+    counted.backend = getattr(base_measure, "backend", backend)
+
+    rows = []
+    for names in ps.paper_triples():
+        ops, _, _ = ps.make_bundle(names, small=small)
+        calls[0] = 0
+        res = autotuner.search(tuple(ops), measure=counted)
+        # the acceptance invariant, enforced where CI can see it: measured
+        # search must beat exhaustive profiling on every registered triple
+        assert res.n_measured == calls[0] < res.lattice_size, \
+            (names, res.n_measured, calls[0], res.lattice_size)
+        best = res.best
+        rows.append({
+            "bundle": "+".join(names),
+            "sched": best.sched.label(),
+            "vmem_cap": best.vmem_cap,
+            "predicted_us": best.est.t_hfused * 1e6,
+            "measured_us": (None if best.measured_s is None
+                            else best.measured_s * 1e6),
+            "cm_vs_measured_delta_pct": best.delta_pct(),
+            "predicted_speedup_pct": best.est.speedup_pct(),
+            "n_measured": res.n_measured,
+            "lattice_size": res.lattice_size,
+        })
+        print(f"# measured {rows[-1]['bundle']}: sched {rows[-1]['sched']} "
+              f"delta {rows[-1]['cm_vs_measured_delta_pct']:.1f}% "
+              f"({res.n_measured}/{res.lattice_size} profiled)")
+
+    report = {"backend": getattr(measure, "backend", backend),
+              "small": small, "rows": rows}
+    out = Path(out_path or f"BENCH_measured_{report['backend']}.json")
+    out.write_text(json.dumps(report, indent=1))
+    print(f"# wrote {out}")
+    return report
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--backend", default="interpret")
+    ap.add_argument("--full", action="store_true",
+                    help="full-size ops (device backends only — interpret "
+                         "execution at full size is intractable)")
+    args = ap.parse_args()
+    run(args.backend, small=not args.full)

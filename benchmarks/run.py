@@ -2,10 +2,16 @@
 integration table + the N-way bundle sweep + the roofline summary.
 
   PYTHONPATH=src python -m benchmarks.run [--fast] [--smoke]
+      [--measure interpret|device]
 
 ``--smoke`` runs just one tiny fused pair and one tiny 3-way bundle in
 interpret mode with numerics checks — the CI guard that keeps the
 benchmark code paths from rotting without paying for the full sweep.
+
+``--measure`` additionally runs the measured-mode autotune report
+(benchmarks/measured.py): two-stage top-K + coordinate-descent search with
+a real measurement callable, emitting ``BENCH_measured_*.json`` with
+predicted-vs-measured columns (uploaded as a CI artifact).
 
 Time columns are cost-model derived over exact FLOP/byte counts (TPU v5e
 targets; this host is CPU-only — see benchmarks/common.py §Methodology);
@@ -48,11 +54,29 @@ def main() -> None:
     ap.add_argument("--smoke", action="store_true",
                     help="tiny pair + 3-way bundle with numerics, then exit "
                          "(the CI benchmark-smoke job)")
+    ap.add_argument("--measure", choices=["interpret", "device", "auto"],
+                    default=None,
+                    help="run the measured-mode autotune report "
+                         "(BENCH_measured_*.json; 'device' = auto-detected "
+                         "TPU/GPU wall clock, 'interpret' = CI proxy)")
     args = ap.parse_args()
+
+    if args.measure:
+        from repro.core.timing import resolve_backend
+        backend = resolve_backend(
+            "auto" if args.measure == "device" else args.measure)
 
     if args.smoke:
         smoke()
+        if args.measure:
+            from benchmarks import measured
+            measured.run(backend, small=True)
         return
+
+    if args.measure:
+        from benchmarks import measured
+        # interpret (incl. auto-resolved on CPU) can't execute full-size ops
+        measured.run(backend, small=(backend == "interpret"))
 
     from benchmarks import fig7_pairs, fig8_kernels, fig9_fused, fig_framework
     from benchmarks import roofline

@@ -1,9 +1,13 @@
 """The paper's contribution: automatic horizontal fusion for TPU/Pallas.
 
-op_spec    — fusible-op IR (1-D grid + BlockSpecs + resource profile)
-cost_model — 3-term roofline scoring (the napkin-math engine)
-hfuse      — Generate(): the fused pallas_call builder (+ vfuse baseline)
-autotuner  — Main(): schedule x variant x VMEM-cap search (Fig. 6)
-planner    — graph-level pairing of memory-bound x compute-bound ops
+op_spec        — fusible-op IR (1-D grid + BlockSpecs + resource profile)
+                 + shrink_blocks (auto block-shrink, the register-cap move)
+cost_model     — 3-term roofline scoring (the napkin-math engine)
+hfuse          — Generate(): the fused pallas_call builder (+ vfuse baseline)
+autotuner      — Main(): two-stage top-K + coordinate-descent search (Fig. 6)
+planner        — graph-level bundling of memory-bound x compute-bound ops
+timing         — make_measure(): the profiler Main() scores candidates with
+schedule_cache — persistent tuned-schedule store (never re-search a bundle)
 """
-from repro.core import autotuner, cost_model, hfuse, op_spec, planner  # noqa: F401
+from repro.core import (autotuner, cost_model, hfuse, op_spec,  # noqa: F401
+                        planner, schedule_cache, timing)

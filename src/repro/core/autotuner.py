@@ -3,25 +3,46 @@
   paper                                  here
   -------------------------------------  -----------------------------------
   d1 <- 128, 256, ... (thread partition) Schedule ratio vectors (r_0:..:r_N)
-  profile F without register bound       cost under full VMEM budget
-  compute r0, profile F with bound r0    cost under the computed VMEM cap
-                                         (shrunk block variants if provided)
+  profile F without register bound       score under full VMEM budget
+  compute r0, profile F with bound r0    score under the computed VMEM cap
+                                         (+ auto-generated shrunk-block
+                                          variants; op_spec.shrink_blocks)
   keep the fastest (F*, r*)              keep (schedule*, variant*, cap*)
 
-Scoring: the three-term roofline cost model by default; on real TPU hardware
-pass ``measure=`` (a wall-clock callable) and the loop becomes the paper's
-measurement-driven profiling verbatim.  Every candidate is recorded in the
-search log (EXPERIMENTS.md shows these for the fig7 pairs).
+The search is two-stage so measurement stays affordable:
+
+  1. the three-term roofline cost model scores the whole lattice
+     (ratio_candidates x variants x caps) — microseconds of Python — and
+     prunes to a ``top_k`` frontier;
+  2. coordinate descent refines the winner: per coordinate, halve/double
+     the ratio while it improves, bounded by ``cd_budget`` evaluations —
+     fine-grained ratios the {1,2,4,grid-proportional} lattice can't
+     express (3+-way bundles with wildly unbalanced grids need e.g. 3:1:5).
+
+With ``measure=`` (a wall-clock callable from ``core/timing.make_measure``)
+stage 2 runs on hardware numbers — the paper's measurement-driven profiling
+verbatim — and evaluates the callable on at most ``top_k + cd_budget``
+candidates, strictly fewer than the exhaustive lattice.  Every candidate is
+recorded in the search log with its cost-model-vs-measured delta
+(EXPERIMENTS.md shows these for the fig7 pairs).
+
+Pass ``cache=`` (core/schedule_cache.ScheduleCache) to skip the search
+entirely for bundles tuned in any previous run.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
 from typing import Callable, Optional, Sequence
 
-from repro.core import hfuse
-from repro.core.cost_model import (VMEM_BUDGET, FusedEstimate, Schedule,
-                                   hfused_cost, ratio_candidates)
+from repro.core import hfuse, schedule_cache as sc
+from repro.core import op_spec as op_spec_mod
+from repro.core.cost_model import (MAX_RATIO, VMEM_BUDGET, FusedEstimate,
+                                   Schedule, hfused_cost, ratio_candidates)
 from repro.core.op_spec import OpSpec
+
+# Full (non-cache-hit) searches since import — planner/tests assert a
+# repeated plan() over an unchanged graph performs ZERO of these.
+SEARCH_COUNT = 0
 
 
 @dataclass
@@ -36,12 +57,23 @@ class Candidate:
     def score(self) -> float:
         return self.measured_s if self.measured_s is not None else self.est.t_hfused
 
+    def delta_pct(self) -> Optional[float]:
+        """Cost-model-vs-measured disagreement (positive: model optimistic)."""
+        if self.measured_s is None:
+            return None
+        return 100.0 * (self.measured_s - self.est.t_hfused) \
+            / max(self.est.t_hfused, 1e-30)
+
 
 @dataclass
 class SearchResult:
     best: Candidate
     log: list[Candidate]
     ops: tuple[OpSpec, ...]
+    lattice_size: int = 0         # exhaustive stage-1 candidate count
+    n_measured: int = 0           # measure() invocations (<= top_k + cd_budget)
+    cache_hit: bool = False
+    cache_key: Optional[str] = None   # set whenever a cache was consulted
 
     # 2-op compatibility accessors
     @property
@@ -62,6 +94,7 @@ class SearchResult:
             "vmem_cap": c.vmem_cap, "t_hfused_us": c.est.t_hfused * 1e6,
             "speedup_pct": c.est.speedup_pct(), "vmem_ok": c.est.vmem_ok,
             "measured_s": c.measured_s,
+            "cm_vs_measured_delta_pct": c.delta_pct(),
         } for c in self.log]
 
 
@@ -73,36 +106,217 @@ def _as_variants(variants) -> list[tuple[OpSpec, ...]]:
     return [tuple(v) for v in variants]
 
 
+def _need(ops: Sequence[OpSpec]) -> int:
+    """Double-buffered co-residency requirement of a bundle."""
+    return 2 * sum(op.vmem_bytes for op in ops)
+
+
+def _variant_fingerprint(ops: Sequence[OpSpec]) -> list:
+    """JSON-able identity of one variant's OpSpecs (names, grids, blocks) —
+    stored in cache entries so a hit never resolves a tuned schedule onto
+    OpSpecs it wasn't tuned for."""
+    return [[o.name, o.grid,
+             ["x".join(map(str, x.block_shape))
+              for x in (*o.inputs, *o.outputs)]]
+            for o in ops]
+
+
+def _shrink_variants(ops: tuple[OpSpec, ...],
+                     vmem_budget: int) -> list[tuple[OpSpec, ...]]:
+    """Auto-generated halved-block bundle variants (paper's register cap).
+
+    Per-member halving (largest working set first) plus whole-bundle
+    halving/quartering until the bundle co-resides — callers no longer
+    pre-build variant lists.  Bounded at N + 2 variants.
+    """
+    variants: list[tuple[OpSpec, ...]] = []
+    seen = set()
+
+    def fingerprint(v):
+        return repr(_variant_fingerprint(v))
+
+    def add(v):
+        fp = fingerprint(v)
+        if fp not in seen and fp != fingerprint(ops):
+            seen.add(fp)
+            variants.append(v)
+
+    for i in sorted(range(len(ops)), key=lambda i: -ops[i].vmem_bytes):
+        s = op_spec_mod.shrink_blocks(ops[i], 2)
+        if s is not None:
+            v = list(ops)
+            v[i] = s
+            add(tuple(v))
+    for factor in (2, 4):
+        v = tuple(op_spec_mod.shrink_blocks(op, factor) or op for op in ops)
+        add(v)
+        if _need(v) <= vmem_budget:
+            break
+    return variants
+
+
+def _expand_variants(variants: list[tuple[OpSpec, ...]], vmem_budget: int,
+                     auto_shrink: bool) -> list[tuple[OpSpec, ...]]:
+    """Deterministic variant list (also re-run on cache hits so a cached
+    ``variant`` index resolves to the same OpSpecs)."""
+    if auto_shrink and len(variants) == 1 and _need(variants[0]) > vmem_budget:
+        variants = variants + _shrink_variants(variants[0], vmem_budget)
+    return variants
+
+
+def _evaluate(ops: tuple[OpSpec, ...], sched: Schedule, vi: int,
+              cap: Optional[int], vmem_budget: int,
+              measure: Optional[Callable]) -> Candidate:
+    est = hfused_cost(ops, sched, vmem_budget=cap or vmem_budget)
+    cand = Candidate(sched, vi, cap, est)
+    if measure is not None:
+        fused = hfuse.generate(ops, sched, vmem_limit=cap)
+        cand.measured_s = measure(fused, *ops)
+    return cand
+
+
+def _coordinate_descent(variants, best: Candidate, vmem_budget: int,
+                        measure: Optional[Callable], budget: int,
+                        log: list[Candidate],
+                        known: Optional[dict] = None) -> tuple[Candidate, int]:
+    """Refine the incumbent's ratio vector: per coordinate, keep halving
+    (then doubling) while the score improves.  At most ``budget``
+    evaluations; under ``measure`` each evaluation is one profiling run.
+
+    ``known`` maps (variant, cap, ratios) -> already-evaluated Candidate
+    (the lattice / measured frontier): revisiting one reuses its score for
+    free instead of burning budget — in measured mode that means never
+    re-profiling a schedule the frontier already ran on hardware."""
+    known = dict(known or {})
+    known[(best.variant, best.vmem_cap, best.sched.ratios)] = best
+    evals = 0
+    improved = True
+    while improved and evals < budget:
+        improved = False
+        for i in range(best.sched.n_ops):
+            for move in ((lambda r: r // 2), (lambda r: r * 2)):
+                while True:
+                    ratios = list(best.sched.ratios)
+                    ratios[i] = move(ratios[i])
+                    if not (1 <= ratios[i] <= MAX_RATIO):
+                        break
+                    key = (best.variant, best.vmem_cap, tuple(ratios))
+                    cand = known.get(key)
+                    if cand is None:
+                        if evals >= budget:
+                            break
+                        cand = _evaluate(variants[best.variant],
+                                         Schedule(ratios), best.variant,
+                                         best.vmem_cap, vmem_budget, measure)
+                        evals += 1
+                        log.append(cand)
+                        known[key] = cand
+                    if cand.score < best.score:
+                        best, improved = cand, True
+                    else:
+                        break
+    return best, evals
+
+
 def search(variants: Sequence, *, vmem_budget: int = VMEM_BUDGET,
-           measure: Optional[Callable] = None) -> SearchResult:
-    """Search schedules × bundle variants × VMEM caps.
+           measure: Optional[Callable] = None, top_k: int = 3,
+           cd_budget: Optional[int] = None, auto_shrink: bool = True,
+           cache: Optional[sc.ScheduleCache] = None) -> SearchResult:
+    """Two-stage schedule search over schedules x bundle variants x VMEM caps.
 
     ``variants``: one bundle — ``(opA, opB)`` or ``(op1, .., opN)`` — or a
-    list of alternative bundles (e.g. alternative block shapes — the
-    register-cap analogue shrinks blocks to restore pipelining headroom).
+    list of alternative bundles.  A single over-budget bundle automatically
+    grows shrunk-block variants (``auto_shrink``).
+
+    ``measure``: optional profiling callable (core/timing.make_measure);
+    invoked on at most ``top_k + cd_budget`` candidates.  ``cd_budget``
+    defaults to 4 measured / 24 cost-model coordinate-descent evaluations.
+
+    ``cache``: optional ScheduleCache — a hit returns the recorded best
+    schedule without searching (SEARCH_COUNT does not move).
     """
-    variants = _as_variants(variants)
+    variants = _expand_variants(_as_variants(variants), vmem_budget,
+                                auto_shrink)
+    mode = (getattr(measure, "backend", "measured")
+            if measure is not None else "costmodel")
+    key = None
+    if cache is not None:
+        key = sc.bundle_signature(variants[0], vmem_budget=vmem_budget,
+                                  mode=mode)
+        entry = cache.get(key)
+        # an entry whose tuned variant doesn't resolve to the SAME OpSpecs
+        # in THIS call's variant list (the signature keys only variants[0])
+        # is a miss — never silently remap a schedule onto different ops
+        if (entry is not None and entry["variant"] < len(variants)
+                and entry.get("variant_fp")
+                == _variant_fingerprint(variants[entry["variant"]])):
+            ops = variants[entry["variant"]]
+            cap = entry["vmem_cap"]
+            est = hfused_cost(ops, Schedule(entry["ratios"]),
+                              vmem_budget=cap or vmem_budget)
+            best = Candidate(Schedule(entry["ratios"]), entry["variant"],
+                             cap, est, measured_s=entry.get("measured_s"))
+            return SearchResult(best=best, log=[best], ops=ops,
+                                lattice_size=entry.get("lattice_size", 0),
+                                n_measured=0, cache_hit=True, cache_key=key)
+
+    global SEARCH_COUNT
+    SEARCH_COUNT += 1
+
+    # ---- stage 1: exhaustive lattice under the cost model (cheap) --------
     log: list[Candidate] = []
-    best: Optional[Candidate] = None
-    best_ops: Optional[tuple[OpSpec, ...]] = None
     for vi, ops in enumerate(variants):
+        caps: list[Optional[int]] = [None]
+        # "with bound r0": the budget the bundle would need to co-reside
+        # with full double buffering (paper Fig. 6 line 13-16 analogue)
+        if _need(ops) > vmem_budget:
+            caps.append(vmem_budget)
         for sched in ratio_candidates(ops):
-            # "no register bound": full budget
-            caps = [None]
-            # "with bound r0": the budget the bundle would need to co-reside
-            # with full double buffering (paper Fig. 6 line 13-16 analogue)
-            need = 2 * sum(op.vmem_bytes for op in ops)
-            if need > vmem_budget:
-                caps.append(vmem_budget)
             for cap in caps:
-                est = hfused_cost(ops, sched,
-                                  vmem_budget=cap or vmem_budget)
-                cand = Candidate(sched, vi, cap, est)
-                if measure is not None:
-                    fused = hfuse.generate(ops, sched, vmem_limit=cap)
-                    cand.measured_s = measure(fused, *ops)
-                log.append(cand)
-                if best is None or cand.score < best.score:
-                    best = cand
-                    best_ops = ops
-    return SearchResult(best=best, log=log, ops=best_ops)
+                log.append(_evaluate(ops, sched, vi, cap, vmem_budget, None))
+    lattice_size = len(log)
+
+    # ---- stage 2: prune + (measured) refine ------------------------------
+    def _key(c):
+        return (c.variant, c.vmem_cap, c.sched.ratios)
+
+    n_measured = 0
+    if measure is None:
+        best = min(log, key=lambda c: c.score)
+        budget = 24 if cd_budget is None else cd_budget
+        best, _ = _coordinate_descent(variants, best, vmem_budget, None,
+                                      budget, log,
+                                      known={_key(c): c for c in log})
+    else:
+        frontier = sorted(log, key=lambda c: c.est.t_hfused)[:max(1, top_k)]
+        for c in frontier:
+            fused = hfuse.generate(variants[c.variant], c.sched,
+                                   vmem_limit=c.vmem_cap)
+            c.measured_s = measure(fused, *variants[c.variant])
+        n_measured = len(frontier)
+        best = min(frontier, key=lambda c: c.score)
+        budget = 4 if cd_budget is None else cd_budget
+        # known = the measured frontier only: CD must never compare (or
+        # re-profile) unmeasured cost-model scores against measured ones
+        best, extra = _coordinate_descent(variants, best, vmem_budget,
+                                          measure, budget, log,
+                                          known={_key(c): c for c in frontier})
+        n_measured += extra
+
+    result = SearchResult(best=best, log=log, ops=variants[best.variant],
+                          lattice_size=lattice_size, n_measured=n_measured,
+                          cache_key=key)
+    if cache is not None and key is not None:
+        cache.put(key, {
+            "members": [op.name for op in variants[0]],
+            "ratios": list(best.sched.ratios),
+            "variant": best.variant,
+            "variant_fp": _variant_fingerprint(variants[best.variant]),
+            "vmem_cap": best.vmem_cap,
+            "predicted_s": best.est.t_hfused,
+            "measured_s": best.measured_s,
+            "delta_pct": best.delta_pct(),
+            "lattice_size": lattice_size,
+            "mode": mode,
+        })
+    return result

@@ -39,6 +39,10 @@ VMEM_BUDGET = int(VMEM_BYTES * 0.8)        # leave headroom for spills/semaphore
 # adaptation finding, recorded in EXPERIMENTS.md §Paper-validation.
 LAUNCH_S = 2e-6
 
+# Interleave-ratio domain shared by the candidate lattice and the
+# autotuner's coordinate descent — one bound, one search space.
+MAX_RATIO = 4096
+
 
 def native_time(op: OpSpec) -> float:
     """Standalone kernel wall-time model: roofline + ramp + launch."""
@@ -193,7 +197,7 @@ def bundle_profitable(ops: Sequence[OpSpec]) -> bool:
     return len({op.bound for op in ops}) > 1
 
 
-def ratio_candidates(*args, max_ratio: int = 4096) -> list[Schedule]:
+def ratio_candidates(*args, max_ratio: int = MAX_RATIO) -> list[Schedule]:
     """Candidate interleave ratio vectors ~ the paper's d1 sweep.
 
     ``ratio_candidates(ops)`` for a bundle or legacy ``ratio_candidates(a, b)``.

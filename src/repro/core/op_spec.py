@@ -47,6 +47,9 @@ class OpSpec:
     flops: float                           # whole-op FLOPs
     hbm_bytes: float                       # whole-op HBM traffic (streaming)
     tag: str = ""                          # provenance (paper-suite name etc.)
+    shrink: Optional[Callable] = None      # factor -> OpSpec with smaller
+    #                                        blocks (overrides shrink_blocks'
+    #                                        structural rewrite)
 
     # ------------------------------------------------------------------
     @property
@@ -95,3 +98,83 @@ class OpSpec:
 def make_operand(arr_or_sds, block_shape, index_map) -> Operand:
     return Operand(tuple(arr_or_sds.shape), arr_or_sds.dtype,
                    tuple(block_shape), index_map)
+
+
+# ---------------------------------------------------------------------------
+# Automatic block shrinking (the paper's register-cap analogue)
+# ---------------------------------------------------------------------------
+MIN_BLOCK_ROWS = 8                # TPU sublane floor (f32 tile is (8, 128))
+
+
+def _index_pattern(operand: Operand) -> Optional[str]:
+    """Classify an index map by probing it with small concrete steps.
+
+    'const'  — same block every step (broadcast operand: weights, carries).
+    'stream' — unit-stride in the leading axis, (s, c1, ..) with the other
+               components constant: the row-partitioned streaming pattern
+               every shrinkable op in this repo uses.
+    None     — anything else (opaque/affine maps): not safely rewritable.
+    """
+    try:
+        probes = [tuple(int(c) for c in operand.index_map(s))
+                  for s in (0, 1, 2)]
+    except Exception:
+        return None
+    if probes[0] == probes[1] == probes[2]:
+        return "const"
+    if (all(p[0] == s for s, p in enumerate(probes))
+            and all(p[1:] == probes[0][1:] for p in probes)):
+        return "stream"
+    return None
+
+
+def shrink_blocks(op: OpSpec, factor: int = 2) -> Optional[OpSpec]:
+    """Halve (``factor=2``) every streamed operand's leading block dim and
+    scale the grid to match — the working set shrinks x``factor``, total
+    work is unchanged.  This is the paper's Fig. 6 register-bound move
+    (maxrregcount r0) translated to VMEM: when a fused bundle can't
+    co-reside double-buffered, smaller blocks restore pipelining headroom.
+
+    Returns None when the rewrite can't be proven safe:
+      * an op-provided ``shrink`` factory takes precedence (exact rewrite);
+      * every operand must classify as 'const' or unit-stride 'stream';
+      * streamed leading dims must divide by ``factor`` and stay >= the
+        sublane floor;
+      * a const operand whose block shares a streamed leading dim is
+        assumed shape-coupled to the stream inside the body (e.g.
+        ethash's seed block is added elementwise to the DAG block) —
+        shrinking one side would break the body.
+    """
+    if factor <= 1:
+        return op
+    if op.shrink is not None:
+        return op.shrink(factor)
+
+    operands = (*op.inputs, *op.outputs)
+    patterns = [_index_pattern(o) for o in operands]
+    if any(p is None for p in patterns):
+        return None
+    stream_leads = {o.block_shape[0]
+                    for o, p in zip(operands, patterns) if p == "stream"}
+    if not stream_leads:
+        return None                           # nothing streams: nothing to shrink
+    for o, p in zip(operands, patterns):
+        if p == "stream":
+            lead = o.block_shape[0]
+            if lead % factor or lead // factor < MIN_BLOCK_ROWS:
+                return None
+        elif any(d in stream_leads for d in o.block_shape):
+            return None                       # body-coupled const operand
+
+    def shrunk(o: Operand, p: str) -> Operand:
+        if p == "const":
+            return o
+        return dataclasses.replace(
+            o, block_shape=(o.block_shape[0] // factor, *o.block_shape[1:]))
+
+    n_in = len(op.inputs)
+    new = [shrunk(o, p) for o, p in zip(operands, patterns)]
+    return dataclasses.replace(
+        op, grid=op.grid * factor,
+        inputs=tuple(new[:n_in]), outputs=tuple(new[n_in:]),
+        tag=f"{op.tag}|blocks/{factor}" if op.tag else f"blocks/{factor}")

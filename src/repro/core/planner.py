@@ -21,12 +21,14 @@ N-way *bundles*:
 """
 from __future__ import annotations
 
+import contextlib
 from dataclasses import dataclass
-from typing import Sequence
+from typing import Callable, Optional, Sequence
 
-from repro.core import autotuner
+from repro.core import autotuner, hfuse
 from repro.core.cost_model import native_time
 from repro.core.op_spec import OpSpec
+from repro.core.schedule_cache import ScheduleCache
 
 
 @dataclass
@@ -40,6 +42,7 @@ class FusionDecision:
     members: tuple[str, ...]
     result: autotuner.SearchResult
     predicted_speedup_pct: float
+    measured_speedup_pct: Optional[float] = None   # set when plan(measure=)
 
     # 2-op compatibility accessors
     @property
@@ -58,13 +61,19 @@ class FusionPlan:
     rejected: list[tuple[str, str, str]]     # (members..., last, reason)
 
     def summary(self) -> list[dict]:
+        """Uniform schema for every row — fused bundles and singles alike:
+        members / schedule / vmem_cap / predicted_speedup_pct /
+        measured_speedup_pct (None unless the plan ran with measure=)."""
         rows = [{
-            "pair": "+".join(d.members),
+            "members": "+".join(d.members),
             "schedule": d.result.best.sched.label(),
             "vmem_cap": d.result.best.vmem_cap,
             "predicted_speedup_pct": round(d.predicted_speedup_pct, 1),
+            "measured_speedup_pct": (None if d.measured_speedup_pct is None
+                                     else round(d.measured_speedup_pct, 1)),
         } for d in self.fused]
-        rows += [{"pair": s, "schedule": "-", "predicted_speedup_pct": 0.0}
+        rows += [{"members": s, "schedule": "-", "vmem_cap": None,
+                  "predicted_speedup_pct": 0.0, "measured_speedup_pct": None}
                  for s in self.singles]
         return rows
 
@@ -100,20 +109,76 @@ def _independent_of_all(clo: dict[str, frozenset], bundle: Sequence[OpSpec],
                for m in bundle)
 
 
-def _bundle_cost(bundle: Sequence[OpSpec]) -> float:
+def _bundle_search(bundle: Sequence[OpSpec],
+                   memo: dict[frozenset, autotuner.SearchResult],
+                   cache: Optional[ScheduleCache]) -> autotuner.SearchResult:
+    """Autotune a bundle, memoized per bundle-name-set.
+
+    Bundle growth re-evaluates every (bundle, candidate) pair each
+    iteration — without the memo ``plan(max_ways>=3)`` is O(n^2) *full*
+    searches.  Keyed by frozenset of member names: within one plan() call
+    names are unique, so the name set identifies the OpSpec set."""
+    key = frozenset(op.name for op in bundle)
+    if key not in memo:
+        memo[key] = autotuner.search(tuple(bundle), cache=cache)
+    return memo[key]
+
+
+def _bundle_cost(bundle: Sequence[OpSpec],
+                 memo: dict[frozenset, autotuner.SearchResult],
+                 cache: Optional[ScheduleCache]) -> float:
     """Best predicted fused time for a bundle (cost-model autotune)."""
-    return autotuner.search(tuple(bundle)).best.est.t_hfused
+    return _bundle_search(bundle, memo, cache).best.est.t_hfused
+
+
+def _measured_speedup(res: autotuner.SearchResult, bundle: Sequence[OpSpec],
+                      measure: Callable,
+                      cache: Optional[ScheduleCache]) -> Optional[float]:
+    """Profile the native baseline (N separate launches) against the tuned
+    fused kernel — the measured analogue of FusedEstimate.speedup_pct.
+
+    The native time rides in the bundle's cache entry (``native_s``), so a
+    replanned graph pays zero profiling runs, not just zero searches."""
+    if res.best.measured_s is None:
+        return None
+    entry = (cache.entries.get(res.cache_key)
+             if cache is not None and res.cache_key else None)
+    t_native = entry.get("native_s") if entry else None
+    if t_native is None:
+        native = hfuse.run_native(tuple(bundle))
+        t_native = measure(native, *bundle)
+        if entry is not None:
+            entry["native_s"] = t_native
+            cache.put(res.cache_key, entry)   # respects batched() deferral
+    return 100.0 * (t_native - res.best.measured_s) / max(t_native, 1e-30)
 
 
 def plan(graph: Sequence[GraphOp], *, min_gain_pct: float = 2.0,
-         allow_same_bound: bool = False, max_ways: int = 2) -> FusionPlan:
+         allow_same_bound: bool = False, max_ways: int = 2,
+         measure: Optional[Callable] = None,
+         cache: Optional[ScheduleCache] = None) -> FusionPlan:
     """Build ≤``max_ways``-way fusion bundles over the independent ops.
 
     ``max_ways=2`` reproduces the paper's pairwise planning; raise it to
     let complementary ops pile into larger bundles when the cost model
     predicts a marginal win for each admission.
+
+    ``measure``: profiling callable (core/timing.make_measure) — accepted
+    bundles get their final schedule picked by measurement (the paper's
+    Main() loop) and a measured_speedup_pct vs the profiled native
+    baseline.  ``cache``: persistent ScheduleCache — every search consults
+    it first, so re-planning an unchanged graph performs zero new searches.
     """
     ops = {g.op.name: g for g in graph}
+    memo: dict[frozenset, autotuner.SearchResult] = {}
+    batch = cache.batched() if cache is not None else contextlib.nullcontext()
+    with batch:
+        return _plan_inner(graph, ops, memo, min_gain_pct, allow_same_bound,
+                           max_ways, measure, cache)
+
+
+def _plan_inner(graph, ops, memo, min_gain_pct, allow_same_bound, max_ways,
+                measure, cache) -> FusionPlan:
     clo = _reachable(ops)
     mem = sorted((g.op for g in graph if g.op.bound == "memory"),
                  key=lambda o: -o.t_native)
@@ -141,7 +206,7 @@ def plan(graph: Sequence[GraphOp], *, min_gain_pct: float = 2.0,
 
         # grow: admit the op with the largest marginal predicted gain —
         # t_hfused(bundle ∪ {x}) must beat t_hfused(bundle) + native(x)
-        t_now = _bundle_cost(bundle)
+        t_now = _bundle_cost(bundle, memo, cache)
         while len(bundle) < max_ways:
             pool = [g.op for g in graph
                     if g.op.name not in used
@@ -149,7 +214,8 @@ def plan(graph: Sequence[GraphOp], *, min_gain_pct: float = 2.0,
                     and _independent_of_all(clo, bundle, g.op)]
             if not pool:
                 break
-            scored = [(t_now + native_time(x) - _bundle_cost(bundle + [x]), x)
+            scored = [(t_now + native_time(x)
+                       - _bundle_cost(bundle + [x], memo, cache), x)
                       for x in pool]
             marginal, x = max(scored, key=lambda s: s[0])
             # a material fraction of x's native time must vanish — launch-
@@ -160,15 +226,34 @@ def plan(graph: Sequence[GraphOp], *, min_gain_pct: float = 2.0,
             bundle.append(x)
             t_now = t_now + native_time(x) - marginal
 
-        res = autotuner.search(tuple(bundle))
+        if measure is None:
+            res = _bundle_search(bundle, memo, cache)
+        else:
+            # measured final tuning (separate cache mode key: the measured
+            # schedule may legitimately differ from the cost-model one)
+            res = autotuner.search(tuple(bundle), measure=measure,
+                                   cache=cache)
         gain = res.best.est.speedup_pct()
         names = tuple(b.name for b in bundle)
-        if gain >= min_gain_pct:
-            fused.append(FusionDecision(names, res, gain))
+        measured_pct = (None if measure is None
+                        else _measured_speedup(res, bundle, measure, cache))
+        # measurement outranks the model for admission too: a bundle the
+        # profiler shows losing is rejected no matter what the model says
+        # (the paper's negative results, caught on hardware).  Rank-only
+        # measures (the interpret CI proxy) pick schedules but their
+        # absolute gains are launch-amortization noise — admission falls
+        # back to the model's prediction for them.
+        use_measured = (measured_pct is not None
+                        and not getattr(measure, "rank_only", False))
+        accept_gain = measured_pct if use_measured else gain
+        if accept_gain >= min_gain_pct:
+            fused.append(FusionDecision(names, res, gain, measured_pct))
             used |= set(names)
         else:
+            kind = "measured" if use_measured else "predicted"
             rejected.append(("+".join(names[:-1]), names[-1],
-                             f"predicted gain {gain:.1f}% < {min_gain_pct}%"))
+                             f"{kind} gain {accept_gain:.1f}% "
+                             f"< {min_gain_pct}%"))
 
     singles = [g.op.name for g in graph if g.op.name not in used]
     return FusionPlan(fused=fused, singles=singles, rejected=rejected)

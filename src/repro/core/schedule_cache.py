@@ -1,0 +1,146 @@
+"""Persistent schedule cache — never re-search a bundle we already tuned.
+
+Production serving/training plans the same op graphs every process start;
+the paper's Main() search (and especially its measured form) is pure waste
+the second time.  Entries are keyed by an exact *bundle signature* — op
+names, grids, operand shapes/dtypes/block shapes, FLOP/byte counts, the
+VMEM budget, and the scoring mode (cost model vs measurement backend) — so
+any change that could alter the tuned schedule changes the key and the
+stale entry is simply never consulted again.  Bumping ``CACHE_VERSION``
+(schema or search-semantics changes) invalidates every file on disk.
+
+File format (JSON, human-inspectable):
+
+    {"version": 2,
+     "entries": {"<sha256-prefix>": {
+        "members": ["maxpool", "upsample", "sha_like"],
+        "ratios": [2, 1, 4], "variant": 0, "vmem_cap": null,
+        "predicted_s": 1.2e-4, "measured_s": 1.3e-4, "delta_pct": 8.3,
+        "mode": "costmodel"}}}
+
+``autotuner.search(cache=...)`` and ``planner.plan(cache=...)`` consult it;
+``default_cache()`` resolves the shared on-disk location
+(``$REPRO_SCHEDULE_CACHE`` or ``~/.cache/repro/schedule_cache.json``).
+"""
+from __future__ import annotations
+
+import contextlib
+import hashlib
+import json
+import os
+from pathlib import Path
+from typing import Optional, Sequence
+
+import jax.numpy as jnp
+
+from repro.core.op_spec import OpSpec
+
+CACHE_VERSION = 2
+
+_DEFAULT: Optional["ScheduleCache"] = None
+
+
+def bundle_signature(ops: Sequence[OpSpec], *, vmem_budget: int,
+                     mode: str = "costmodel") -> str:
+    """Exact identity of a tuning problem.  Includes everything the search
+    outcome can depend on; excludes anything it cannot (body closures)."""
+    parts = [f"v{CACHE_VERSION}", mode, str(int(vmem_budget))]
+    for op in ops:
+        operands = ",".join(
+            "{}:{}:{}".format("x".join(map(str, o.shape)),
+                              jnp.dtype(o.dtype).name,
+                              "x".join(map(str, o.block_shape)))
+            for o in (*op.inputs, *op.outputs))
+        parts.append(f"{op.name}|g{op.grid}|f{op.flops:.6g}"
+                     f"|h{op.hbm_bytes:.6g}|{operands}")
+    return hashlib.sha256(";".join(parts).encode()).hexdigest()[:32]
+
+
+class ScheduleCache:
+    """In-memory dict with optional JSON persistence and hit/miss stats."""
+
+    def __init__(self, path: Optional[os.PathLike | str] = None):
+        self.path = Path(path) if path else None
+        self.entries: dict[str, dict] = {}
+        self.hits = 0
+        self.misses = 0
+        self._defer = False
+        self._dirty = False
+        if self.path is not None:
+            self.load()
+
+    # ------------------------------------------------------------------
+    def get(self, key: str) -> Optional[dict]:
+        entry = self.entries.get(key)
+        if entry is None:
+            self.misses += 1
+        else:
+            self.hits += 1
+        return entry
+
+    def put(self, key: str, entry: dict) -> None:
+        self.entries[key] = entry
+        if self._defer:
+            self._dirty = True
+        elif self.path is not None:
+            self.save()
+
+    @contextlib.contextmanager
+    def batched(self):
+        """Defer disk writes until the block exits — one save for a whole
+        plan()/search() burst instead of a full-file rewrite per put()."""
+        prev = self._defer
+        self._defer = True
+        try:
+            yield self
+        finally:
+            self._defer = prev
+            if self._dirty and not self._defer:
+                self._dirty = False
+                self.save()
+
+    def __len__(self) -> int:
+        return len(self.entries)
+
+    # ------------------------------------------------------------------
+    def load(self) -> None:
+        if self.path is None or not self.path.exists():
+            return
+        try:
+            blob = json.loads(self.path.read_text())
+        except (json.JSONDecodeError, OSError):
+            return                            # corrupt cache == empty cache
+        if blob.get("version") != CACHE_VERSION:
+            return                            # stale schema: discard
+        self.entries.update(blob.get("entries", {}))
+
+    def save(self) -> None:
+        if self.path is None:
+            return
+        self.path.parent.mkdir(parents=True, exist_ok=True)
+        # merge concurrent writers: keys are content-addressed, so entries
+        # another process added since our load are kept (ours win on clash)
+        merged = dict(self.entries)
+        try:
+            blob = json.loads(self.path.read_text())
+            if blob.get("version") == CACHE_VERSION:
+                merged = {**blob.get("entries", {}), **self.entries}
+        except (FileNotFoundError, json.JSONDecodeError, OSError):
+            pass
+        tmp = self.path.with_suffix(f".tmp.{os.getpid()}")   # no writer races
+        tmp.write_text(json.dumps(
+            {"version": CACHE_VERSION, "entries": merged},
+            indent=1, sort_keys=True))
+        tmp.replace(self.path)                # atomic on POSIX
+        self.entries = merged
+
+
+def default_cache() -> ScheduleCache:
+    """Process-wide cache at $REPRO_SCHEDULE_CACHE (or ~/.cache/repro/)."""
+    global _DEFAULT
+    if _DEFAULT is None:
+        path = os.environ.get(
+            "REPRO_SCHEDULE_CACHE",
+            str(Path.home() / ".cache" / "repro" / "schedule_cache.json"))
+        _DEFAULT = ScheduleCache(path)
+    return _DEFAULT

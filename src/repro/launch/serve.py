@@ -25,14 +25,36 @@ def main(argv=None):
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--plan-fusion", action="store_true",
+                    help="plan the decode-step fusion bundle "
+                         "(RMSNorm + decode attention + router/FFN)")
+    ap.add_argument("--measure", choices=["auto", "interpret", "tpu", "gpu"],
+                    default=None,
+                    help="pick planned schedules by measurement "
+                         "(core/timing.make_measure backend)")
     args = ap.parse_args(argv)
+    if args.measure and not args.plan_fusion:
+        ap.error("--measure only applies to --plan-fusion schedule selection")
 
     cfg = get_config(args.arch)
     if args.scale == "smoke":
         cfg = cfg.reduced()
     params = lm.init(cfg, jax.random.PRNGKey(0))
+    measure = None
+    schedule_cache = None
+    if args.plan_fusion:
+        from repro.core.schedule_cache import default_cache
+        from repro.core.timing import make_measure
+        measure = make_measure(args.measure) if args.measure else None
+        schedule_cache = default_cache()
     engine = ServeEngine(cfg, params, batch=args.batch,
-                         max_len=args.prompt_len + args.max_new + 8)
+                         max_len=args.prompt_len + args.max_new + 8,
+                         plan_fusion=args.plan_fusion, measure=measure,
+                         schedule_cache=schedule_cache)
+    if engine.fusion_plan is not None:
+        print("[plan-fusion] decode-step bundles:")
+        for row in engine.fusion_plan.summary():
+            print(f"  {row}")
     rng = np.random.default_rng(0)
     reqs = [Request(rid=i,
                     prompt=rng.integers(0, cfg.vocab_size,

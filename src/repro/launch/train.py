@@ -48,12 +48,21 @@ def main(argv=None):
     ap.add_argument("--ckpt-every", type=int, default=20)
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--hfused-optimizer", action="store_true")
+    ap.add_argument("--plan-fusion", action="store_true",
+                    help="plan optimizer/backward fusion bundles "
+                         "(planner.plan over update OpSpecs + dW matmuls)")
+    ap.add_argument("--measure", choices=["auto", "interpret", "tpu", "gpu"],
+                    default=None,
+                    help="pick planned schedules by measurement "
+                         "(core/timing.make_measure backend)")
     ap.add_argument("--compression", choices=["int8_pod"], default=None)
     ap.add_argument("--zero", action="store_true")
     ap.add_argument("--grad-accum", type=int, default=1)
     ap.add_argument("--max-failures", type=int, default=3)
     ap.add_argument("--log-every", type=int, default=10)
     args = ap.parse_args(argv)
+    if args.measure and not args.plan_fusion:
+        ap.error("--measure only applies to --plan-fusion schedule selection")
 
     cfg = get_config(args.arch)
     if args.scale == "smoke":
@@ -64,6 +73,20 @@ def main(argv=None):
     tcfg = TrainConfig(optimizer=ocfg, grad_accum=args.grad_accum,
                        compression=args.compression, zero=args.zero,
                        remat=args.scale == "full")
+
+    if args.plan_fusion:
+        from repro.core.schedule_cache import default_cache
+        from repro.core.timing import make_measure
+        from repro.train.train_loop import plan_update_fusion
+        measure = make_measure(args.measure) if args.measure else None
+        abstract_params = jax.eval_shape(
+            lambda: lm.init(cfg, jax.random.PRNGKey(0)))
+        fplan = plan_update_fusion(
+            abstract_params, tokens=args.batch * args.seq, measure=measure,
+            cache=default_cache())
+        print("[plan-fusion] optimizer/backward bundles:")
+        for row in fplan.summary():
+            print(f"  {row}")
 
     mesh = None
     if args.scale == "full":

@@ -38,7 +38,9 @@ class Request:
 
 class ServeEngine:
     def __init__(self, cfg: ModelConfig, params, *, batch: int = 8,
-                 max_len: int = 512, rng_seed: int = 0):
+                 max_len: int = 512, rng_seed: int = 0,
+                 plan_fusion: bool = False, measure=None,
+                 schedule_cache=None):
         self.cfg = cfg
         self.params = params
         self.batch = batch
@@ -48,6 +50,60 @@ class ServeEngine:
             lambda p, c, t: lm.decode_step(cfg, p, c, t))
         self._prefill = jax.jit(
             lambda p, b: lm.prefill(cfg, p, b, max_len=self.max_len))
+        self.fusion_plan = (self.plan_decode_fusion(
+            measure=measure, cache=schedule_cache) if plan_fusion else None)
+
+    # ------------------------------------------------------------------
+    def plan_decode_fusion(self, *, max_ways: int = 3, prefill_chunk: int = 2048,
+                           measure=None, cache=None):
+        """Register the serving step's ops as a planner graph (ROADMAP):
+        decode-wave RMSNorm + decode attention + the router/FFN projection,
+        plus a prefill-chunk FFN matmul — the compute-bound partner of the
+        chunked-prefill⊕decode overlap mode (benchmarks/fig_framework).
+        ``planner.plan(max_ways=3)`` decides the bundle; with ``measure``
+        the schedule is profiled, and ``cache`` makes every later engine
+        start skip the search entirely.
+        """
+        from repro.core import planner
+        from repro.kernels.decode_attention import decode_attention_op
+        from repro.kernels.matmul import matmul_1d_op
+        from repro.kernels.rmsnorm import rmsnorm_op
+
+        cfg = self.cfg
+        d, H, Hkv = cfg.d_model, cfg.num_heads, cfg.num_kv_heads
+        D = cfg.resolved_head_dim
+        dt = jnp.dtype(cfg.dtype)
+        S = max(128, -(-self.max_len // 128) * 128)     # cache, 128-aligned
+        B = self.batch
+
+        norm = rmsnorm_op(R=B, d=d, dtype=dt, bm=B)
+        # largest 128-multiple chunk <= 1024 that divides S (S is 128-aligned,
+        # so the scan bottoms out at ck=128)
+        ck = next(c for c in range(min(1024, S), 0, -128) if S % c == 0)
+        att = decode_attention_op(B=B, S=S, H=H, Hkv=Hkv, D=D, dtype=dt,
+                                  ck=ck)
+        # decode-wave projection: MoE router when the model routes, else the
+        # FFN up-projection — weight streaming dominates at serving batch
+        # (memory-bound; the honest fig_framework finding), so the planner
+        # pairs it with the prefill chunk's genuinely compute-bound matmul.
+        n_out = cfg.moe.num_experts if cfg.moe is not None else max(cfg.d_ff, d)
+        proj = matmul_1d_op(M=B, K=d, N=n_out, dtype=dt, bm=B)
+        proj = dataclasses.replace(
+            proj, name="moe_router" if cfg.moe is not None else "ffn_proj")
+        # decode-step dataflow: norm -> attention -> router/FFN; proj reads
+        # the POST-attention hidden state, so it can never fuse with att —
+        # the only legal cross-stream partner is the prefill chunk
+        graph = [planner.GraphOp(norm),
+                 planner.GraphOp(att, deps=frozenset({norm.name})),
+                 planner.GraphOp(proj, deps=frozenset({norm.name,
+                                                       att.name}))]
+        if prefill_chunk:
+            pf = matmul_1d_op(M=prefill_chunk, K=d, N=max(cfg.d_ff, d),
+                              dtype=dt, bm=min(128, prefill_chunk))
+            pf = dataclasses.replace(pf, name="prefill_ffn")
+            graph.append(planner.GraphOp(pf))
+        return planner.plan(graph, max_ways=max_ways, measure=measure,
+                            cache=cache)
 
     # ------------------------------------------------------------------
     def _prefill_wave(self, wave: list[Request]):

@@ -40,6 +40,55 @@ class TrainConfig:
     max_grad_norm: float = 1.0
 
 
+def plan_update_fusion(params, *, tokens: int = 4096, max_ways: int = 3,
+                       bm: int = 1024, max_tensors: int = 8,
+                       measure=None, cache=None):
+    """Hand the optimizer's per-tensor update OpSpecs plus the backward dW
+    matmuls to ``planner.plan(max_ways>=3)`` — optimizer/backward overlap is
+    *planned*, not hand-wired (ROADMAP; docs/nway_fusion.md).
+
+    Each 2-D parameter contributes its dW matmul ``x^T @ g``
+    ((d_in, tokens) x (tokens, d_out)); each parameter contributes its
+    AdamW-update OpSpec, which *depends on* its own dW (an update can never
+    fuse with the matmul producing its gradient, but rides another
+    tensor's).  ``measure``/``cache`` flow through to the autotuner, so
+    schedules are profiled once (core/timing) and reused forever
+    (core/schedule_cache).  Largest ``max_tensors`` parameters only — the
+    tail adds launches the multi-tensor Adam path already amortizes.
+    """
+    import math
+
+    from repro.core import planner
+    from repro.kernels.adam import LANES, adamw_op
+    from repro.kernels.matmul import matmul_1d_op
+
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    flat = sorted(flat, key=lambda kv: -math.prod(kv[1].shape or (1,)))
+    graph: list[planner.GraphOp] = []
+    for path, leaf in flat[:max_tensors]:
+        pname = "".join(c if c.isalnum() else "_"
+                        for c in jax.tree_util.keystr(path)).strip("_")
+        n = math.prod(leaf.shape) if leaf.shape else 1
+        rows = math.ceil(n / LANES)
+        bm_i = min(bm, rows)
+        R = math.ceil(rows / bm_i) * bm_i
+        deps: frozenset[str] = frozenset()
+        if leaf.ndim == 2:
+            d_in, d_out = leaf.shape
+            bmm = min(256, d_in)
+            if d_in % bmm == 0:
+                dw = matmul_1d_op(M=d_in, K=tokens, N=d_out, dtype=leaf.dtype,
+                                  bm=bmm)
+                dw = dataclasses.replace(dw, name=f"dW_{pname}",
+                                         tag="train:dW")
+                graph.append(planner.GraphOp(dw))
+                deps = frozenset({dw.name})
+        upd = adamw_op(R=R, dtype=leaf.dtype, bm=bm_i, name=f"adamw_{pname}")
+        graph.append(planner.GraphOp(upd, deps=deps))
+    return planner.plan(graph, max_ways=max_ways, measure=measure,
+                        cache=cache)
+
+
 def _split_microbatches(batch: dict, n: int) -> dict:
     def r(x):
         return x.reshape((n, x.shape[0] // n) + x.shape[1:])
