@@ -4,7 +4,7 @@
 
 For every registered paper_suite triple, run the two-stage measured search
 (``autotuner.search(measure=...)``) and emit
-``BENCH_measured_<backend>.json``: per-bundle best schedule, cost-model
+``BENCH_measured_<backend>_<git-sha>.json``: per-bundle best schedule, cost-model
 prediction, measurement, their delta, and the search-economics columns
 (measure() invocations vs the exhaustive lattice size — the paper's Main()
 loop would have profiled the whole lattice).  CI runs this in interpret
@@ -14,10 +14,27 @@ uploads the JSON as a build artifact, so the perf trajectory accumulates.
 from __future__ import annotations
 
 import json
+import os
+import subprocess
 import sys
 from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+
+def git_sha(short: int = 8) -> str:
+    """Short git SHA for report filenames — multi-host runs (and successive
+    commits) stop clobbering each other's BENCH artifacts."""
+    sha = os.environ.get("GITHUB_SHA", "")
+    if not sha:
+        try:
+            sha = subprocess.run(
+                ["git", "rev-parse", "HEAD"], capture_output=True, text=True,
+                cwd=Path(__file__).resolve().parent, timeout=10,
+            ).stdout.strip()
+        except (OSError, subprocess.SubprocessError):
+            sha = ""
+    return sha[:short] or "nogit"
 
 
 def run(backend: str = "interpret", *, small: bool = True,
@@ -62,8 +79,9 @@ def run(backend: str = "interpret", *, small: bool = True,
               f"({res.n_measured}/{res.lattice_size} profiled)")
 
     report = {"backend": getattr(measure, "backend", backend),
-              "small": small, "rows": rows}
-    out = Path(out_path or f"BENCH_measured_{report['backend']}.json")
+              "small": small, "git_sha": git_sha(), "rows": rows}
+    out = Path(out_path
+               or f"BENCH_measured_{report['backend']}_{report['git_sha']}.json")
     out.write_text(json.dumps(report, indent=1))
     print(f"# wrote {out}")
     return report

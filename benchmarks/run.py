@@ -59,6 +59,11 @@ def main() -> None:
                     help="run the measured-mode autotune report "
                          "(BENCH_measured_*.json; 'device' = auto-detected "
                          "TPU/GPU wall clock, 'interpret' = CI proxy)")
+    ap.add_argument("--execute-plan", action="store_true",
+                    help="run the executed-plan report: train-update and "
+                         "serve-decode programs lowered by core/executor, "
+                         "verified + timed on live operands "
+                         "(BENCH_executed_*.json)")
     args = ap.parse_args()
 
     if args.measure:
@@ -71,12 +76,19 @@ def main() -> None:
         if args.measure:
             from benchmarks import measured
             measured.run(backend, small=True)
+        if args.execute_plan:
+            from benchmarks import executed
+            executed.run(backend if args.measure else "interpret")
         return
 
     if args.measure:
         from benchmarks import measured
         # interpret (incl. auto-resolved on CPU) can't execute full-size ops
         measured.run(backend, small=(backend == "interpret"))
+
+    if args.execute_plan:
+        from benchmarks import executed
+        executed.run(backend if args.measure else "interpret")
 
     from benchmarks import fig7_pairs, fig8_kernels, fig9_fused, fig_framework
     from benchmarks import roofline

@@ -75,13 +75,21 @@ class SearchResult:
     cache_hit: bool = False
     cache_key: Optional[str] = None   # set whenever a cache was consulted
 
-    # 2-op compatibility accessors
+    # deprecated 2-op compatibility accessors (everything is N-way now)
     @property
     def a(self) -> OpSpec:
+        import warnings
+        warnings.warn("SearchResult.a/.b are deprecated — bundles are "
+                      "N-way; use SearchResult.ops",
+                      DeprecationWarning, stacklevel=2)
         return self.ops[0]
 
     @property
     def b(self) -> OpSpec:
+        import warnings
+        warnings.warn("SearchResult.a/.b are deprecated — bundles are "
+                      "N-way; use SearchResult.ops",
+                      DeprecationWarning, stacklevel=2)
         return self.ops[1]
 
     def build(self, *, interpret: bool = False):

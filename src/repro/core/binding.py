@@ -1,0 +1,156 @@
+"""Binding registry — how a planned graph touches live arrays.
+
+The planner decides WHAT fuses (core/planner.py) and the autotuner decides
+HOW (core/autotuner.py); neither ever sees a real tensor.  The executor
+(core/executor.py) closes that gap, and this module is its contract: a
+``BindingRegistry`` maps each graph op's *named operands* (the stable
+``OpSpec.in_names`` / ``out_names`` signature) onto getters and setters over
+a **state pytree** — a flat ``dict[str, Array]`` threaded through the
+program.  Dataflow between ops is expressed by key sharing (op A's output
+slot writes the key op B's input slot reads), and framework glue (a QKV
+projection between a norm and the attention that consumes it, a residual
+add, a reshape into the optimizer's flat (R, 128) layout) lives in the
+slots themselves — pure-jnp closures, so a compiled program stays jittable.
+
+Three slot forms, in increasing power:
+
+  "key"                      — read/write ``state[key]`` verbatim.
+  Slot(key, get=, put=)      — ``get(state[key]) -> array`` view on read;
+                               ``put(state[key], new) -> value`` on write.
+  Slot(get=, put=) (no key)  — whole-state forms: ``get(state) -> array``
+                               and ``put(state, new) -> state``; this is
+                               where inter-op glue lives.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Mapping, Optional, Sequence
+
+from repro.core.op_spec import OpSpec
+
+State = dict
+
+
+@dataclass(frozen=True)
+class Slot:
+    """One operand's route in and out of the state pytree."""
+    key: Optional[str] = None
+    get: Optional[Callable] = None
+    put: Optional[Callable] = None
+
+    def read(self, state: State):
+        if self.key is None:
+            if self.get is None:
+                raise ValueError("input slot needs a key or a get()")
+            return self.get(state)
+        val = state[self.key]
+        return self.get(val) if self.get is not None else val
+
+    def write(self, state: State, new) -> State:
+        if self.key is None:
+            if self.put is None:
+                raise ValueError("output slot needs a key or a put()")
+            return self.put(state, new)
+        state = dict(state)
+        state[self.key] = (self.put(state.get(self.key), new)
+                           if self.put is not None else new)
+        return state
+
+
+def _as_slot(s) -> Slot:
+    if isinstance(s, Slot):
+        return s
+    if isinstance(s, str):
+        return Slot(key=s)
+    raise TypeError(f"operand binding must be a key string or Slot, got {s!r}")
+
+
+class BindingRegistry:
+    """Per-op operand-name -> Slot table, validated against OpSpec signatures.
+
+    ``bind(op_name, **slots)`` binds input and output operands that share a
+    name (in-place operands) to the same slot; ``bind(op_name,
+    inputs={...}, outputs={...})`` splits them when reads and writes must
+    route differently.
+    """
+
+    def __init__(self):
+        self._inputs: dict[str, dict[str, Slot]] = {}
+        self._outputs: dict[str, dict[str, Slot]] = {}
+
+    def bind(self, op_name: str, inputs: Optional[Mapping] = None,
+             outputs: Optional[Mapping] = None, **shared) -> "BindingRegistry":
+        ins = {k: _as_slot(v) for k, v in {**shared, **(inputs or {})}.items()}
+        outs = {k: _as_slot(v) for k, v in {**shared, **(outputs or {})}.items()}
+        self._inputs.setdefault(op_name, {}).update(ins)
+        self._outputs.setdefault(op_name, {}).update(outs)
+        return self
+
+    # ------------------------------------------------------------------
+    def validate(self, op: OpSpec) -> None:
+        """Every named operand of ``op`` must resolve to a slot."""
+        if not op.has_signature:
+            raise ValueError(
+                f"op '{op.name}' has no operand signature "
+                f"(OpSpec.in_names/out_names) — the executor cannot bind it")
+        missing = [n for n in op.in_names
+                   if n not in self._inputs.get(op.name, {})]
+        missing += [f"{n} (out)" for n in op.out_names
+                    if n not in self._outputs.get(op.name, {})]
+        if missing:
+            raise ValueError(
+                f"op '{op.name}': unbound operands {missing} — "
+                f"register them with BindingRegistry.bind()")
+
+    def inputs(self, op: OpSpec, state: State) -> list:
+        table = self._inputs[op.name]
+        return [table[n].read(state) for n in op.in_names]
+
+    def commit(self, op: OpSpec, state: State, outs: Sequence) -> State:
+        table = self._outputs[op.name]
+        for name, new in zip(op.out_names, outs):
+            state = table[name].write(state, new)
+        return state
+
+    def describe(self, op: OpSpec) -> dict:
+        def lab(slot: Slot, rw):
+            fn = slot.get if rw == "r" else slot.put
+            return (slot.key or "<computed>") + ("*" if fn else "")
+        return {
+            "inputs": {n: lab(self._inputs[op.name][n], "r")
+                       for n in op.in_names},
+            "outputs": {n: lab(self._outputs[op.name][n], "w")
+                        for n in op.out_names},
+        }
+
+
+def default_bindings(ops: Sequence[OpSpec]) -> BindingRegistry:
+    """One state key per (op, operand): ``"{op.name}.{operand}"``.  The
+    no-dataflow registry — tests and benchmarks bind synthesized operands;
+    real integrations share keys to wire producer -> consumer."""
+    reg = BindingRegistry()
+    for op in ops:
+        reg.bind(op.name, **{n: f"{op.name}.{n}"
+                             for n in (*op.in_names, *op.out_names)})
+    return reg
+
+
+def synth_state(ops: Sequence[OpSpec], seed: int = 0) -> State:
+    """Random/zero buffers for every *input* operand under default keys
+    (mirrors core/timing.synth_inputs, but keyed for the executor)."""
+    import jax
+    import jax.numpy as jnp
+
+    key = jax.random.PRNGKey(seed)
+    state: State = {}
+    for op in ops:
+        for name, o in zip(op.in_names, op.inputs):
+            k = f"{op.name}.{name}"
+            if k in state:
+                continue
+            key, sub = jax.random.split(key)
+            if jnp.issubdtype(jnp.dtype(o.dtype), jnp.floating):
+                state[k] = jax.random.normal(sub, o.shape).astype(o.dtype) * 0.1
+            else:
+                state[k] = jnp.zeros(o.shape, o.dtype)
+    return state

@@ -50,6 +50,25 @@ class OpSpec:
     shrink: Optional[Callable] = None      # factor -> OpSpec with smaller
     #                                        blocks (overrides shrink_blocks'
     #                                        structural rewrite)
+    # Stable operand signature (core/binding.py contract): one name per
+    # input/output, positional order.  An op with names can be bound to live
+    # arrays by the executor; unnamed operands are tuning-only.  A name may
+    # appear in BOTH tuples (in-place semantics: adamw's p/m/v) — the
+    # binding then reads and rewrites the same state key.
+    in_names: tuple[str, ...] = ()
+    out_names: tuple[str, ...] = ()
+
+    def __post_init__(self):
+        if self.in_names and len(self.in_names) != len(self.inputs):
+            raise ValueError(f"{self.name}: {len(self.in_names)} in_names "
+                             f"for {len(self.inputs)} inputs")
+        if self.out_names and len(self.out_names) != len(self.outputs):
+            raise ValueError(f"{self.name}: {len(self.out_names)} out_names "
+                             f"for {len(self.outputs)} outputs")
+
+    @property
+    def has_signature(self) -> bool:
+        return bool(self.in_names) and bool(self.out_names)
 
     # ------------------------------------------------------------------
     @property

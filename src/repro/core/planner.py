@@ -22,6 +22,7 @@ N-way *bundles*:
 from __future__ import annotations
 
 import contextlib
+import warnings
 from dataclasses import dataclass
 from typing import Callable, Optional, Sequence
 
@@ -44,13 +45,19 @@ class FusionDecision:
     predicted_speedup_pct: float
     measured_speedup_pct: Optional[float] = None   # set when plan(measure=)
 
-    # 2-op compatibility accessors
+    # deprecated 2-op compatibility accessors (everything is N-way now)
     @property
     def a(self) -> str:
+        warnings.warn("FusionDecision.a/.b are deprecated — bundles are "
+                      "N-way; use FusionDecision.members",
+                      DeprecationWarning, stacklevel=2)
         return self.members[0]
 
     @property
     def b(self) -> str:
+        warnings.warn("FusionDecision.a/.b are deprecated — bundles are "
+                      "N-way; use FusionDecision.members",
+                      DeprecationWarning, stacklevel=2)
         return self.members[1]
 
 
@@ -59,6 +66,8 @@ class FusionPlan:
     fused: list[FusionDecision]
     singles: list[str]
     rejected: list[tuple[str, str, str]]     # (members..., last, reason)
+    graph: tuple["GraphOp", ...] = ()        # the graph this plan was built
+    #                                          from (executor.compile_plan)
 
     def summary(self) -> list[dict]:
         """Uniform schema for every row — fused bundles and singles alike:
@@ -256,4 +265,5 @@ def _plan_inner(graph, ops, memo, min_gain_pct, allow_same_bound, max_ways,
                              f"< {min_gain_pct}%"))
 
     singles = [g.op.name for g in graph if g.op.name not in used]
-    return FusionPlan(fused=fused, singles=singles, rejected=rejected)
+    return FusionPlan(fused=fused, singles=singles, rejected=rejected,
+                      graph=tuple(graph))

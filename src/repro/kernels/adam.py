@@ -90,7 +90,9 @@ def adamw_op(R: int, dtype=jnp.bfloat16, bm: int = 1024,
                  Operand((R, C), jnp.float32, (bm, C), blk)),
         flops=12.0 * R * C,
         hbm_bytes=R * C * (2 * itemsize + 3 * 4 + itemsize + 2 * 4),
-        tag="framework:adamw")
+        tag="framework:adamw",
+        in_names=("scalars", "p", "g", "m", "v"),
+        out_names=("p", "m", "v"))
 
 
 # ---------------------------------------------------------------------------

@@ -23,19 +23,29 @@ NEG_INF = -1e30
 
 def decode_attention_op(B: int, S: int, H: int, Hkv: int, D: int,
                         dtype=jnp.bfloat16, ck: int = 1024,
-                        length=None) -> OpSpec:
+                        length=None, dynamic_length: bool = False) -> OpSpec:
     """q: (B,H,D); cache k,v: (B,S,Hkv,D); out o: (B,H,D) fp32.
 
     Grid: B * (S // ck) steps, batch-major.  `length` (static) masks the
-    valid cache prefix; None = full cache.
+    valid cache prefix; None = full cache.  ``dynamic_length`` instead adds
+    a tiny (1, 1) int32 operand ("len", constant index map — fetched once)
+    holding the valid prefix, so one compiled kernel serves every decode
+    position — the form the executor binds to a live ``pos + 1``.
     """
     assert S % ck == 0 and H % Hkv == 0
+    assert not (dynamic_length and length is not None)
     nk = S // ck
     rep = H // Hkv
     scale = 1.0 / math.sqrt(D)
     valid_len = S if length is None else int(length)
 
-    def body(step, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref):
+    def body(step, *refs):
+        if dynamic_length:
+            len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref = refs
+            cur_len = len_ref[0, 0]
+        else:
+            q_ref, k_ref, v_ref, o_ref, m_ref, l_ref = refs
+            cur_len = valid_len
         j = step % nk
 
         @pl.when(j == 0)
@@ -50,7 +60,7 @@ def decode_attention_op(B: int, S: int, H: int, Hkv: int, D: int,
         qg = q.reshape(Hkv, rep, D)
         s = jnp.einsum("hrd,khd->hrk", qg, k)             # (Hkv, rep, ck)
         kpos = j * ck + jax.lax.broadcasted_iota(jnp.int32, (Hkv, rep, ck), 2)
-        s = jnp.where(kpos < valid_len, s, NEG_INF)
+        s = jnp.where(kpos < cur_len, s, NEG_INF)
         m_prev = m_ref[0]                                 # (H, 1)
         m_new = jnp.maximum(m_prev, s.reshape(H, ck).max(-1, keepdims=True))
         p = jnp.exp(s.reshape(H, ck) - m_new)
@@ -65,13 +75,16 @@ def decode_attention_op(B: int, S: int, H: int, Hkv: int, D: int,
             o_ref[0] = o_ref[0] / jnp.maximum(l_ref[0], 1e-30)
 
     itemsize = jnp.dtype(dtype).itemsize
+    len_in = ((Operand((1, 1), jnp.int32, (1, 1), lambda s: (0, 0)),)
+              if dynamic_length else ())
     return OpSpec(
         name=f"decode_attn_B{B}_S{S}_H{H}kv{Hkv}", grid=B * nk, body=body,
-        inputs=(Operand((B, H, D), dtype, (1, H, D), lambda s: (s // nk, 0, 0)),
-                Operand((B, S, Hkv, D), dtype, (1, ck, Hkv, D),
-                        lambda s: (s // nk, s % nk, 0, 0)),
-                Operand((B, S, Hkv, D), dtype, (1, ck, Hkv, D),
-                        lambda s: (s // nk, s % nk, 0, 0))),
+        inputs=len_in
+        + (Operand((B, H, D), dtype, (1, H, D), lambda s: (s // nk, 0, 0)),
+           Operand((B, S, Hkv, D), dtype, (1, ck, Hkv, D),
+                   lambda s: (s // nk, s % nk, 0, 0)),
+           Operand((B, S, Hkv, D), dtype, (1, ck, Hkv, D),
+                   lambda s: (s // nk, s % nk, 0, 0))),
         outputs=(Operand((B, H, D), jnp.float32, (1, H, D),
                          lambda s: (s // nk, 0, 0)),
                  Operand((B, H, 1), jnp.float32, (1, H, 1),
@@ -81,4 +94,6 @@ def decode_attention_op(B: int, S: int, H: int, Hkv: int, D: int,
         flops=2.0 * B * H * valid_len * D * 2,
         hbm_bytes=2.0 * B * valid_len * Hkv * D * itemsize
         + 2.0 * B * H * D * itemsize,
-        tag="framework:decode_attention")
+        tag="framework:decode_attention",
+        in_names=(("len",) if dynamic_length else ()) + ("q", "k", "v"),
+        out_names=("o", "m", "l"))

@@ -79,4 +79,5 @@ def matmul_1d_op(M: int, K: int, N: int, dtype=jnp.bfloat16,
         outputs=(Operand((M, N), dtype, (bm, N), lambda s: (s, 0)),),
         flops=2.0 * M * K * N,
         hbm_bytes=(M * K + K * N + M * N) * itemsize,
-        tag="framework:matmul")
+        tag="framework:matmul",
+        in_names=("x", "w"), out_names=("out",))

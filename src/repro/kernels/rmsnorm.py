@@ -50,4 +50,5 @@ def rmsnorm_op(R: int, d: int, dtype=jnp.bfloat16, bm: int = 256,
         outputs=(Operand((R, d), dtype, (bm, d), lambda s: (s, 0)),),
         flops=4.0 * R * d,
         hbm_bytes=2.0 * R * d * itemsize,
-        tag="framework:rmsnorm")
+        tag="framework:rmsnorm",
+        in_names=("x", "scale"), out_names=("out",))

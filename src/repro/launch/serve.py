@@ -55,6 +55,10 @@ def main(argv=None):
         print("[plan-fusion] decode-step bundles:")
         for row in engine.fusion_plan.summary():
             print(f"  {row}")
+        print("[plan-fusion] decode step "
+              + ("EXECUTES through the plan->program executor "
+                 "(core/executor)" if engine.executed
+                 else "falls back to the hand-wired path"))
     rng = np.random.default_rng(0)
     reqs = [Request(rid=i,
                     prompt=rng.integers(0, cfg.vocab_size,

@@ -29,10 +29,12 @@ from repro.train.train_loop import TrainConfig, make_train_step
 from repro.train.optimizer import AdamWConfig
 
 
-def build(cfg, tcfg: TrainConfig, mesh=None):
+def build(cfg, tcfg: TrainConfig, mesh=None, update_program=None):
     params = lm.init(cfg, jax.random.PRNGKey(0))
     opt_state = opt_mod.init(params)
-    step_fn = jax.jit(make_train_step(cfg, tcfg, mesh), donate_argnums=(0, 1))
+    step_fn = jax.jit(make_train_step(cfg, tcfg, mesh,
+                                      update_program=update_program),
+                      donate_argnums=(0, 1))
     return params, opt_state, step_fn
 
 
@@ -49,8 +51,12 @@ def main(argv=None):
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--hfused-optimizer", action="store_true")
     ap.add_argument("--plan-fusion", action="store_true",
-                    help="plan optimizer/backward fusion bundles "
-                         "(planner.plan over update OpSpecs + dW matmuls)")
+                    help="plan optimizer/backward fusion bundles AND execute "
+                         "the optimizer step through the plan->program "
+                         "executor (core/executor)")
+    ap.add_argument("--dry-steps", type=int, default=None,
+                    help="run only N steps with checkpointing disabled "
+                         "(CI executor smoke)")
     ap.add_argument("--measure", choices=["auto", "interpret", "tpu", "gpu"],
                     default=None,
                     help="pick planned schedules by measurement "
@@ -63,6 +69,9 @@ def main(argv=None):
     args = ap.parse_args(argv)
     if args.measure and not args.plan_fusion:
         ap.error("--measure only applies to --plan-fusion schedule selection")
+    if args.dry_steps is not None:
+        args.steps = args.dry_steps
+        args.ckpt_dir = ""
 
     cfg = get_config(args.arch)
     if args.scale == "smoke":
@@ -74,18 +83,27 @@ def main(argv=None):
                        compression=args.compression, zero=args.zero,
                        remat=args.scale == "full")
 
+    update_program = None
     if args.plan_fusion:
         from repro.core.schedule_cache import default_cache
         from repro.core.timing import make_measure
-        from repro.train.train_loop import plan_update_fusion
+        from repro.train.train_loop import (build_update_program,
+                                            plan_update_fusion)
         measure = make_measure(args.measure) if args.measure else None
         abstract_params = jax.eval_shape(
             lambda: lm.init(cfg, jax.random.PRNGKey(0)))
         fplan = plan_update_fusion(
             abstract_params, tokens=args.batch * args.seq, measure=measure,
             cache=default_cache())
-        print("[plan-fusion] optimizer/backward bundles:")
+        print("[plan-fusion] optimizer/backward bundles (planning view):")
         for row in fplan.summary():
+            print(f"  {row}")
+        # the executed hot path: every leaf's update, lowered plan->program
+        update_program = build_update_program(
+            abstract_params, ocfg, measure=measure, cache=default_cache())
+        print("[plan-fusion] executed update program "
+              f"({update_program.program.n_fused} fused launches):")
+        for row in update_program.describe():
             print(f"  {row}")
 
     mesh = None
@@ -106,7 +124,7 @@ def main(argv=None):
     watchdog = StepWatchdog()
 
     def make_state():
-        params, opt_state, step_fn = build(cfg, tcfg, mesh)
+        params, opt_state, step_fn = build(cfg, tcfg, mesh, update_program)
         start = 0
         if ckpt and args.resume:
             got = checkpoint.restore_latest(

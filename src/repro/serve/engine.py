@@ -7,6 +7,20 @@ wavefront.  Per-slot-position continuous batching would need a vectorized
 cache position (B,) — noted as an extension in DESIGN.md; iteration-level
 batching is what the assigned decode shapes (uniform context length) model.
 
+Fusion execution (``plan_fusion=True``): the decode step is *planned* by
+``plan_decode_fusion`` and *executed* through the plan->program executor
+(core/executor) — the norm -> decode-attention -> FFN-projection chain runs
+as Pallas kernels routed by a binding registry over the live wave state
+(hidden activations, the KV-cache blocks, the layer weights), with the
+model glue (QKV projection, RoPE, residuals, gating, head) living in the
+binding setters.  When another wave is waiting, its prompt's FFN
+in-projection — the compute-bound partner the planner pairs with the
+memory-bound cache streaming — rides in the same fused launch, and the
+rest of that wave's prefill completes in the same jitted step: chunked
+prefill⊕decode co-execution, the dual-stream mode with *used* outputs.
+Configs outside the supported shape (multi-run stacks, MoE, non-RMSNorm)
+fall back to the hand-wired ``lm.decode_step`` with a notice.
+
 On the production mesh the cache is sequence-sharded and decode attention is
 the distributed flash-decode (DESIGN.md §7).  ``examples/dual_stream_decode.py``
 shows the horizontal-fusion dual-stream variant of the decode step.
@@ -21,7 +35,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import ModelConfig
+from repro.configs.base import ATTN, ModelConfig
 from repro.models import lm
 
 
@@ -36,6 +50,51 @@ class Request:
     done: bool = False
 
 
+def executable_decode_supported(cfg: ModelConfig) -> Optional[str]:
+    """None when the planned decode program can replace ``lm.decode_step``
+    for this config; otherwise the reason for the hand-wired fallback."""
+    runs = lm.layer_runs(cfg)
+    if cfg.frontend != "none":
+        return f"frontend {cfg.frontend!r} (token frontend only)"
+    if len(runs) != 1 or runs[0].count != 1 or runs[0].kind != ATTN:
+        return "needs a single unstacked global-attention layer run"
+    if cfg.is_moe:
+        return "MoE FFN dispatch not yet routed through the executor"
+    if cfg.norm != "rmsnorm":
+        return f"norm {cfg.norm!r} (rmsnorm only)"
+    if cfg.d_ff <= 0:
+        return "no FFN"
+    if cfg.activation not in ("silu", "gelu", "gelu_mlp", "relu2_mlp"):
+        return f"activation {cfg.activation!r}"
+    return None
+
+
+def _ffn_in_width(cfg: ModelConfig) -> int:
+    """Width of the decode step's FFN in-projection — the real ``w_in``
+    (gated activations fuse gate+up into one (d, 2f) matmul)."""
+    if cfg.moe is not None:
+        return cfg.moe.num_experts
+    if cfg.d_ff <= 0:
+        return cfg.d_model
+    return 2 * cfg.d_ff if cfg.activation in ("silu", "gelu") else cfg.d_ff
+
+
+def _mlp_from_h(cfg: ModelConfig, h, w_out):
+    """layers.mlp, minus the in-projection the executor already ran."""
+    act = cfg.activation
+    if act in ("silu", "gelu"):
+        gate, up = jnp.split(h, 2, axis=-1)
+        g = jax.nn.silu(gate) if act == "silu" else jax.nn.gelu(gate)
+        h = g * up
+    elif act == "gelu_mlp":
+        h = jax.nn.gelu(h)
+    elif act == "relu2_mlp":
+        h = jnp.square(jax.nn.relu(h))
+    else:
+        raise ValueError(act)
+    return h @ w_out
+
+
 class ServeEngine:
     def __init__(self, cfg: ModelConfig, params, *, batch: int = 8,
                  max_len: int = 512, rng_seed: int = 0,
@@ -46,23 +105,42 @@ class ServeEngine:
         self.batch = batch
         self.max_len = max_len
         self.rng = jax.random.PRNGKey(rng_seed)
+        self._measure = measure
+        self._schedule_cache = schedule_cache
         self._decode = jax.jit(
             lambda p, c, t: lm.decode_step(cfg, p, c, t))
         self._prefill = jax.jit(
             lambda p, b: lm.prefill(cfg, p, b, max_len=self.max_len))
-        self.fusion_plan = (self.plan_decode_fusion(
-            measure=measure, cache=schedule_cache) if plan_fusion else None)
+
+        self.executed = False
+        self._mixed_steps: dict[int, object] = {}   # prompt len -> jitted step
+        self.fusion_plan = None
+        if plan_fusion:
+            reason = executable_decode_supported(cfg)
+            if reason is None:
+                # the executed decode program indexes the cache by the
+                # planned (128-aligned) length — size the cache to match
+                self.max_len = self._aligned_len()
+                self._decode = jax.jit(self._make_decode_step(prefill_len=0))
+                self.executed = True
+            else:
+                print(f"[plan-fusion] decode step stays hand-wired: {reason}")
+            self.fusion_plan = self.plan_decode_fusion(
+                measure=measure, cache=schedule_cache)
 
     # ------------------------------------------------------------------
-    def plan_decode_fusion(self, *, max_ways: int = 3, prefill_chunk: int = 2048,
-                           measure=None, cache=None):
-        """Register the serving step's ops as a planner graph (ROADMAP):
-        decode-wave RMSNorm + decode attention + the router/FFN projection,
+    def _aligned_len(self) -> int:
+        return max(128, -(-self.max_len // 128) * 128)
+
+    def decode_graph(self, *, prefill_rows: int = 2048,
+                     dynamic_length: bool = True):
+        """The serving step as a planner graph, with stable operand
+        signatures (core/binding.py): decode-wave RMSNorm -> decode
+        attention -> post-attention RMSNorm -> the router/FFN in-projection,
         plus a prefill-chunk FFN matmul — the compute-bound partner of the
-        chunked-prefill⊕decode overlap mode (benchmarks/fig_framework).
-        ``planner.plan(max_ways=3)`` decides the bundle; with ``measure``
-        the schedule is profiled, and ``cache`` makes every later engine
-        start skip the search entirely.
+        chunked-prefill⊕decode overlap mode.  ``prefill_rows=0`` drops the
+        prefill partner (a pure decode step: a dependency chain the planner
+        correctly leaves unfused).
         """
         from repro.core import planner
         from repro.kernels.decode_attention import decode_attention_op
@@ -73,46 +151,235 @@ class ServeEngine:
         d, H, Hkv = cfg.d_model, cfg.num_heads, cfg.num_kv_heads
         D = cfg.resolved_head_dim
         dt = jnp.dtype(cfg.dtype)
-        S = max(128, -(-self.max_len // 128) * 128)     # cache, 128-aligned
+        S = self._aligned_len()                        # cache, 128-aligned
         B = self.batch
 
-        norm = rmsnorm_op(R=B, d=d, dtype=dt, bm=B)
+        norm1 = dataclasses.replace(rmsnorm_op(R=B, d=d, dtype=dt, bm=B),
+                                    name="decode_norm1")
+        norm2 = dataclasses.replace(rmsnorm_op(R=B, d=d, dtype=dt, bm=B),
+                                    name="decode_norm2")
         # largest 128-multiple chunk <= 1024 that divides S (S is 128-aligned,
         # so the scan bottoms out at ck=128)
         ck = next(c for c in range(min(1024, S), 0, -128) if S % c == 0)
         att = decode_attention_op(B=B, S=S, H=H, Hkv=Hkv, D=D, dtype=dt,
-                                  ck=ck)
+                                  ck=ck, dynamic_length=dynamic_length)
         # decode-wave projection: MoE router when the model routes, else the
-        # FFN up-projection — weight streaming dominates at serving batch
+        # FFN in-projection — weight streaming dominates at serving batch
         # (memory-bound; the honest fig_framework finding), so the planner
         # pairs it with the prefill chunk's genuinely compute-bound matmul.
-        n_out = cfg.moe.num_experts if cfg.moe is not None else max(cfg.d_ff, d)
-        proj = matmul_1d_op(M=B, K=d, N=n_out, dtype=dt, bm=B)
+        proj = matmul_1d_op(M=B, K=d, N=_ffn_in_width(cfg), dtype=dt, bm=B)
         proj = dataclasses.replace(
             proj, name="moe_router" if cfg.moe is not None else "ffn_proj")
-        # decode-step dataflow: norm -> attention -> router/FFN; proj reads
-        # the POST-attention hidden state, so it can never fuse with att —
-        # the only legal cross-stream partner is the prefill chunk
-        graph = [planner.GraphOp(norm),
-                 planner.GraphOp(att, deps=frozenset({norm.name})),
-                 planner.GraphOp(proj, deps=frozenset({norm.name,
-                                                       att.name}))]
-        if prefill_chunk:
-            pf = matmul_1d_op(M=prefill_chunk, K=d, N=max(cfg.d_ff, d),
-                              dtype=dt, bm=min(128, prefill_chunk))
+        # decode-step dataflow: norm1 -> attention -> norm2 -> router/FFN;
+        # proj reads the POST-attention hidden state, so it can never fuse
+        # with att — the only legal cross-stream partner is the prefill chunk
+        graph = [planner.GraphOp(norm1),
+                 planner.GraphOp(att, deps=frozenset({norm1.name})),
+                 planner.GraphOp(norm2, deps=frozenset({norm1.name,
+                                                        att.name})),
+                 planner.GraphOp(proj, deps=frozenset({norm2.name}))]
+        if prefill_rows:
+            # the prefill chunk's partner is always a full-FFN-width matmul
+            # (compute-bound at scale) — for MoE that is the expert FFN, not
+            # the tiny router projection the decode side plans
+            pf_n = (max(cfg.d_ff, d) if cfg.moe is not None
+                    else _ffn_in_width(cfg))
+            pf = matmul_1d_op(M=prefill_rows, K=d, N=pf_n,
+                              dtype=dt, bm=min(128, prefill_rows))
             pf = dataclasses.replace(pf, name="prefill_ffn")
             graph.append(planner.GraphOp(pf))
+        return graph
+
+    def plan_decode_fusion(self, *, max_ways: int = 3, prefill_chunk: int = 2048,
+                           measure=None, cache=None):
+        """Register the serving step's ops as a planner graph (ROADMAP) and
+        plan the bundles; ``build_decode_program`` lowers the result onto
+        the live wave state.  With ``measure`` the schedule is profiled, and
+        ``cache`` makes every later engine start skip the search entirely.
+        """
+        from repro.core import planner
+
+        graph = self.decode_graph(prefill_rows=prefill_chunk)
         return planner.plan(graph, max_ways=max_ways, measure=measure,
                             cache=cache)
 
     # ------------------------------------------------------------------
-    def _prefill_wave(self, wave: list[Request]):
-        """Waves are grouped by prompt length (see run()); empty slots
-        duplicate row 0 and are ignored."""
+    # Executed decode step: plan -> program -> live wave state
+    # ------------------------------------------------------------------
+    def build_decode_program(self, *, prefill_rows: int = 0,
+                             interpret: Optional[bool] = None):
+        """Compile the planned decode step into an executor Program bound to
+        the live wave state.  The binding setters carry the model glue: the
+        norm's output slot projects QKV, applies RoPE and writes the cache;
+        the attention output slot applies W_o and the residual; the
+        projection output slot finishes the MLP and the second residual.
+        """
+        from repro.core import executor, planner
+        from repro.core.binding import BindingRegistry, Slot
+        from repro.models import layers
+
+        cfg = self.cfg
+        if interpret is None:
+            interpret = jax.default_backend() != "tpu"
+        d, H, Hkv = cfg.d_model, cfg.num_heads, cfg.num_kv_heads
+        D = cfg.resolved_head_dim
+        dt = jnp.dtype(cfg.dtype)
+        B = self.batch
+
+        graph = self.decode_graph(prefill_rows=prefill_rows)
+        # allow_same_bound: at full scale the prefill chunk is genuinely
+        # compute-bound (the paper pairing); at smoke scale everything is
+        # memory-bound and the launch/ramp amortization still decides —
+        # admission stays the planner's, never forced
+        plan = planner.plan(graph, max_ways=3, allow_same_bound=True,
+                            measure=self._measure,
+                            cache=self._schedule_cache)
+
+        def norm1_put(state, y):
+            x1 = y[:, None, :].astype(dt)                       # (B, 1, d)
+            q, k, v = layers.qkv_project(cfg, {"w_qkv": state["w_qkv"]}, x1)
+            positions = jnp.full((B, 1), state["pos"], jnp.int32)
+            q = layers.rope(q, positions, cfg.rope_theta, cfg.rope_fraction)
+            k = layers.rope(k, positions, cfg.rope_theta, cfg.rope_fraction)
+            state = dict(state)
+            state["q"] = q[:, 0]
+            state["k_cache"] = jax.lax.dynamic_update_slice(
+                state["k_cache"], k, (0, state["pos"], 0, 0))
+            state["v_cache"] = jax.lax.dynamic_update_slice(
+                state["v_cache"], v, (0, state["pos"], 0, 0))
+            return state
+
+        def att_put(state, o):
+            attn_out = o.astype(dt).reshape(B, H * D) @ state["w_o"]
+            state = dict(state)
+            state["h_mid"] = state["x"] + attn_out              # residual 1
+            return state
+
+        def proj_put(state, h):
+            ff = _mlp_from_h(cfg, h.astype(dt), state["w_out"])
+            state = dict(state)
+            state["x_out"] = state["h_mid"] + ff                # residual 2
+            return state
+
+        reg = BindingRegistry()
+        reg.bind("decode_norm1", x="x", scale="norm1_scale",
+                 outputs={"out": Slot(put=norm1_put)})
+        att_name = next(g.op.name for g in graph
+                        if g.op.name.startswith("decode_attn"))
+        reg.bind(att_name, q="q", k="k_cache", v="v_cache",
+                 inputs={"len": Slot(get=lambda s: (s["pos"] + 1)
+                                     .reshape(1, 1).astype(jnp.int32))},
+                 outputs={"o": Slot(put=att_put), "m": "attn_m",
+                          "l": "attn_l"})
+        reg.bind("decode_norm2", x="h_mid", scale="norm2_scale",
+                 outputs={"out": "h2"})
+        proj_name = "moe_router" if cfg.moe is not None else "ffn_proj"
+        reg.bind(proj_name, x="h2", w="w_in",
+                 outputs={"out": Slot(put=proj_put)})
+        if prefill_rows:
+            reg.bind("prefill_ffn", x="pf_h2", w="w_in", outputs={"out": "pf_ffn"})
+        return executor.compile_plan(plan, bindings=reg, interpret=interpret)
+
+    def _wave_state(self, params, cache, x):
+        run = lm.layer_runs(self.cfg)[0]
+        p = params[run.name]
+        return {
+            "x": x, "pos": cache["pos"],
+            "norm1_scale": p["norm1"]["scale"].reshape(1, -1),
+            "norm2_scale": p["norm2"]["scale"].reshape(1, -1),
+            "w_qkv": p["attn"]["w_qkv"], "w_o": p["attn"]["w_o"],
+            "w_in": p["mlp"]["w_in"], "w_out": p["mlp"]["w_out"],
+            "k_cache": cache[run.name]["k"], "v_cache": cache[run.name]["v"],
+        }
+
+    def _make_decode_step(self, prefill_len: int):
+        """The jitted executed decode step.  ``prefill_len > 0`` is the
+        mixed form: the pending wave's (B, prefill_len) prompt rides along —
+        its FFN in-projection joins the fused launch, the rest of its
+        prefill completes here, and the returned (cache, logits) seed that
+        wave's decode without ever calling ``lm.prefill``."""
+        from repro.models import layers
+
+        cfg = self.cfg
+        B, d = self.batch, cfg.d_model
+        run = lm.layer_runs(cfg)[0]
+        S = self._aligned_len()
+        P = prefill_len
+        rows = B * P
+        pf_rows = rows if rows <= 128 else -(-rows // 128) * 128
+        program = self.build_decode_program(prefill_rows=pf_rows if P else 0)
+
+        def step(params, cache, tokens, pf_tokens=None):
+            p = params[run.name]
+            x = layers.embed_onehot(params["embed"], tokens[:, None], d)
+            state = self._wave_state(params, cache, x[:, 0])
+
+            if P:
+                # pending wave's prefill, up to the FFN in-projection
+                xp, _ = lm._embed_inputs(cfg, params, {"tokens": pf_tokens})
+                hp = layers.apply_norm(cfg, p["norm1"], xp)
+                qp, kp, vp = layers.qkv_project(cfg, p["attn"], hp)
+                positions = jnp.arange(P)[None, :]
+                qp = layers.rope(qp, positions, cfg.rope_theta,
+                                 cfg.rope_fraction)
+                kp = layers.rope(kp, positions, cfg.rope_theta,
+                                 cfg.rope_fraction)
+                op_ = layers.blockwise_attention(qp, kp, vp, causal=True)
+                xm = xp + op_.reshape(B, P, -1) @ p["attn"]["w_o"]
+                h2p = layers.apply_norm(cfg, p["norm2"], xm)
+                pf_x = h2p.reshape(rows, d)
+                if pf_rows != rows:
+                    pf_x = jnp.concatenate(
+                        [pf_x, jnp.zeros((pf_rows - rows, d), pf_x.dtype)])
+                state["pf_h2"] = pf_x.astype(jnp.dtype(cfg.dtype))
+
+            state = program(state)
+
+            xf = layers.apply_norm(cfg, params["final_norm"],
+                                   state["x_out"][:, None, :].astype(x.dtype))
+            logits = lm._head(cfg, params, xf)[:, 0]
+            new_cache = {"pos": cache["pos"] + 1,
+                         run.name: {"k": state["k_cache"],
+                                    "v": state["v_cache"]}}
+            if not P:
+                return logits, new_cache
+
+            ff = _mlp_from_h(cfg, state["pf_ffn"][:rows]
+                             .astype(jnp.dtype(cfg.dtype)).reshape(B, P, -1),
+                             p["mlp"]["w_out"])
+            xop = xm + ff
+            kc = jnp.zeros((B, S) + kp.shape[2:], kp.dtype)
+            vc = jnp.zeros_like(kc)
+            pf_cache = {"pos": jnp.asarray(P, jnp.int32),
+                        run.name: {
+                            "k": jax.lax.dynamic_update_slice(
+                                kc, kp, (0, 0, 0, 0)),
+                            "v": jax.lax.dynamic_update_slice(
+                                vc, vp, (0, 0, 0, 0))}}
+            xfp = layers.apply_norm(cfg, params["final_norm"], xop[:, -1:])
+            pf_logits = lm._head(cfg, params, xfp)[:, 0]
+            return logits, new_cache, pf_cache, pf_logits
+
+        return step
+
+    def _mixed_step(self, prefill_len: int):
+        if prefill_len not in self._mixed_steps:
+            self._mixed_steps[prefill_len] = jax.jit(
+                self._make_decode_step(prefill_len))
+        return self._mixed_steps[prefill_len]
+
+    # ------------------------------------------------------------------
+    def _wave_tokens(self, wave: list[Request]) -> np.ndarray:
         S = len(wave[0].prompt)
         toks = np.zeros((self.batch, S), np.int32)
         for i, r in enumerate(wave):
             toks[i] = r.prompt
+        return toks
+
+    def _prefill_wave(self, wave: list[Request]):
+        """Waves are grouped by prompt length (see run()); empty slots
+        duplicate row 0 and are ignored."""
+        toks = self._wave_tokens(wave)
         cache, last_logits = self._prefill(self.params, {"tokens": jnp.asarray(toks)})
         return cache, last_logits
 
@@ -133,22 +400,38 @@ class ServeEngine:
         for _, group in sorted(by_len.items()):
             for i in range(0, len(group), self.batch):
                 pending.append(group[i: i + self.batch])
+        carried = None              # (cache, logits) co-prefilled for pending[0]
         while pending:
             wave = pending.pop(0)
-            cache, last_logits = self._prefill_wave(wave)
+            if carried is not None:
+                cache, last_logits = carried
+                carried = None
+            else:
+                cache, last_logits = self._prefill_wave(wave)
             logits = np.asarray(last_logits, np.float32)
             for i, r in enumerate(wave):
                 r.out_tokens.append(self._sample(logits[i], r))
             budget = max(r.max_new_tokens for r in wave)
-            for _ in range(budget - 1):
+            for step_i in range(budget - 1):
                 if all(r.done or len(r.out_tokens) >= r.max_new_tokens
                        for r in wave):
                     break
                 toks = np.zeros((self.batch,), np.int32)
                 for i, r in enumerate(wave):
                     toks[i] = r.out_tokens[-1]
-                out, cache = self._decode(self.params, cache,
-                                          jnp.asarray(toks))
+                if (self.executed and step_i == 0 and pending
+                        and carried is None):
+                    # chunked prefill⊕decode co-execution: the next wave's
+                    # prompt FFN rides in this step's fused launch
+                    nxt = pending[0]
+                    out, cache, pf_cache, pf_logits = self._mixed_step(
+                        len(nxt[0].prompt))(
+                            self.params, cache, jnp.asarray(toks),
+                            jnp.asarray(self._wave_tokens(nxt)))
+                    carried = (pf_cache, pf_logits)
+                else:
+                    out, cache = self._decode(self.params, cache,
+                                              jnp.asarray(toks))
                 logits = np.asarray(out, np.float32)
                 for i, r in enumerate(wave):
                     if r.done or len(r.out_tokens) >= r.max_new_tokens:

@@ -1,0 +1,90 @@
+"""Operational tooling CLI.
+
+  PYTHONPATH=src python -m repro.tools cache-inspect [--cache PATH] [--json]
+
+``cache-inspect`` dumps the persistent schedule cache
+(core/schedule_cache.py): one row per tuned bundle — members, mode,
+schedule, predicted vs measured time and their delta — plus aggregate
+stats: entry count vs the LRU bound, measured coverage, mean/max
+|cm-vs-measured delta|, and *stale signatures* (entries never consulted
+since they were recorded: the bundle shape they key no longer occurs in
+any planned graph, so they are LRU-eviction candidates).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def _resolve_cache(path: str | None):
+    from repro.core.schedule_cache import ScheduleCache, default_cache
+    if path:
+        return ScheduleCache(path)
+    return default_cache()
+
+
+def cache_inspect(args) -> int:
+    cache = _resolve_cache(args.cache)
+    rows = []
+    for key, e in sorted(cache.entries.items()):
+        if not isinstance(e, dict):
+            continue
+        m = cache.meta.get(key, {})
+        rows.append({
+            "key": key[:12],
+            "members": "+".join(e.get("members", ["?"])),
+            "mode": e.get("mode"),
+            "sched": ":".join(str(r) for r in e.get("ratios", [])),
+            "vmem_cap": e.get("vmem_cap"),
+            "predicted_us": (None if e.get("predicted_s") is None
+                             else round(e["predicted_s"] * 1e6, 2)),
+            "measured_us": (None if e.get("measured_s") is None
+                            else round(e["measured_s"] * 1e6, 2)),
+            "delta_pct": (None if e.get("delta_pct") is None
+                          else round(e["delta_pct"], 1)),
+            "uses": m.get("uses", 0),
+            "last_used": m.get("last_used", 0),
+        })
+    stats = cache.stats()
+    stats["max_entries"] = cache.max_entries
+    if args.json:
+        print(json.dumps({"stats": stats, "entries": rows}, indent=1))
+        return 0
+    print(f"# schedule cache: {stats['path']}")
+    if not rows:
+        print("# (empty)")
+        return 0
+    cols = list(rows[0])
+    widths = {c: max(len(c), *(len(str(r[c])) for r in rows)) for c in cols}
+    print("  ".join(c.ljust(widths[c]) for c in cols))
+    for r in rows:
+        print("  ".join(str(r[c]).ljust(widths[c]) for c in cols))
+    print(f"# {stats['entries']} entries"
+          + (f" (bound {stats['max_entries']}, LRU)"
+             if stats["max_entries"] else " (unbounded)")
+          + f", {stats['measured']} measured, "
+          f"{stats['stale_never_reused']} stale (never re-consulted)")
+    if stats["mean_abs_delta_pct"] is not None:
+        print(f"# cm-vs-measured |delta|: mean "
+              f"{stats['mean_abs_delta_pct']:.1f}% "
+              f"max {stats['max_abs_delta_pct']:.1f}%")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.tools")
+    sub = ap.add_subparsers(dest="cmd", required=True)
+    ci = sub.add_parser("cache-inspect",
+                        help="dump the persistent schedule cache")
+    ci.add_argument("--cache", default=None,
+                    help="cache file (default: the shared default cache — "
+                         "$REPRO_SCHEDULE_CACHE with its LRU bound)")
+    ci.add_argument("--json", action="store_true")
+    ci.set_defaults(fn=cache_inspect)
+    args = ap.parse_args(argv)
+    return args.fn(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -67,13 +67,36 @@ def abstract_init(abstract_params) -> OptState:
                     count=jax.ShapeDtypeStruct((), jnp.int32))
 
 
-def update(ocfg: AdamWConfig, grads, state: OptState, params):
-    """One AdamW step.  Returns (new_params, new_state)."""
+def update(ocfg: AdamWConfig, grads, state: OptState, params, *,
+           program=None):
+    """One AdamW step.  Returns (new_params, new_state).
+
+    ``program`` (a ``train_loop.UpdateProgram``) routes the whole update
+    through the plan->program executor — fused bundles via
+    ``SearchResult.build()``, leftover tensors via ``run_single`` — instead
+    of the hand-wired jnp / hfused-kernel paths below.
+    """
     cnt = state.count + 1
     lr = schedule(ocfg, cnt)
     b1, b2 = ocfg.b1, ocfg.b2
     bc1 = 1 - b1 ** cnt.astype(jnp.float32)
     bc2 = 1 - b2 ** cnt.astype(jnp.float32)
+
+    if program is not None:
+        # b1/b2/eps/wd are baked into the program's op bodies at build time
+        # (lr/bias corrections ride in the scalars operand) — a program built
+        # for different hyperparameters must never silently apply them
+        built = getattr(program, "hyper", None)
+        want = dict(b1=ocfg.b1, b2=ocfg.b2, eps=ocfg.eps,
+                    wd=ocfg.weight_decay)
+        if built is not None and built != want:
+            raise ValueError(
+                f"update program was built for hyperparameters {built}, "
+                f"but update() was called with {want} — rebuild it with "
+                f"build_update_program(params, ocfg)")
+        new_params, new_m, new_v = program(params, grads, state.m, state.v,
+                                           lr=lr, bc1=bc1, bc2=bc2)
+        return new_params, OptState(new_m, new_v, cnt)
 
     if ocfg.hfused and jax.default_backend() == "tpu":
         from repro.kernels import ops as kops

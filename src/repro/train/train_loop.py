@@ -40,40 +40,59 @@ class TrainConfig:
     max_grad_norm: float = 1.0
 
 
-def plan_update_fusion(params, *, tokens: int = 4096, max_ways: int = 3,
-                       bm: int = 1024, max_tensors: int = 8,
-                       measure=None, cache=None):
-    """Hand the optimizer's per-tensor update OpSpecs plus the backward dW
-    matmuls to ``planner.plan(max_ways>=3)`` — optimizer/backward overlap is
-    *planned*, not hand-wired (ROADMAP; docs/nway_fusion.md).
+def leaf_update_name(path) -> str:
+    """Stable graph-op name stem for one param leaf — the ONE place leaf
+    paths become op names (plan, bindings, and state keys all share it)."""
+    return "".join(c if c.isalnum() else "_"
+                   for c in jax.tree_util.keystr(path)).strip("_")
 
-    Each 2-D parameter contributes its dW matmul ``x^T @ g``
-    ((d_in, tokens) x (tokens, d_out)); each parameter contributes its
-    AdamW-update OpSpec, which *depends on* its own dW (an update can never
-    fuse with the matmul producing its gradient, but rides another
-    tensor's).  ``measure``/``cache`` flow through to the autotuner, so
-    schedules are profiled once (core/timing) and reused forever
-    (core/schedule_cache).  Largest ``max_tensors`` parameters only — the
-    tail adds launches the multi-tensor Adam path already amortizes.
+
+def _leaf_rows(leaf, bm: int):
+    """(n, R, bm_i): flat element count, padded (R, 128) rows, block rows —
+    the layout contract shared by kernels.adam._flatten_leaf and the
+    adamw OpSpec grid."""
+    import math
+
+    from repro.kernels.adam import LANES
+
+    n = math.prod(leaf.shape) if leaf.shape else 1
+    rows = math.ceil(n / LANES)
+    bm_i = min(bm, rows)
+    R = math.ceil(rows / bm_i) * bm_i
+    return n, R, bm_i
+
+
+def update_graph(params, *, tokens: int = 4096, bm: int = 1024,
+                 max_tensors: Optional[int] = 8, include_dW: bool = True,
+                 b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+                 wd: float = 0.1):
+    """The optimizer-step op graph: one AdamW-update OpSpec per param leaf
+    (stable operand signature: scalars/p/g/m/v -> p/m/v) and, with
+    ``include_dW``, the backward dW matmul ``x^T @ g`` each 2-D parameter's
+    update *depends on* (an update can never fuse with the matmul producing
+    its gradient, but rides another tensor's).
+
+    Returns ``(graph, layout)``: the planner graph plus the per-leaf layout
+    ``[(name, path, n, R, bm_i), ...]`` the executor's pack/unpack uses —
+    names are derived once here, not re-derived ad hoc by callers.
     """
     import math
 
     from repro.core import planner
-    from repro.kernels.adam import LANES, adamw_op
+    from repro.kernels.adam import adamw_op
     from repro.kernels.matmul import matmul_1d_op
 
     flat = jax.tree_util.tree_flatten_with_path(params)[0]
-    flat = sorted(flat, key=lambda kv: -math.prod(kv[1].shape or (1,)))
+    if max_tensors is not None:
+        flat = sorted(flat, key=lambda kv: -math.prod(kv[1].shape or (1,)))
+        flat = flat[:max_tensors]
     graph: list[planner.GraphOp] = []
-    for path, leaf in flat[:max_tensors]:
-        pname = "".join(c if c.isalnum() else "_"
-                        for c in jax.tree_util.keystr(path)).strip("_")
-        n = math.prod(leaf.shape) if leaf.shape else 1
-        rows = math.ceil(n / LANES)
-        bm_i = min(bm, rows)
-        R = math.ceil(rows / bm_i) * bm_i
+    layout: list[tuple] = []
+    for path, leaf in flat:
+        pname = leaf_update_name(path)
+        n, R, bm_i = _leaf_rows(leaf, bm)
         deps: frozenset[str] = frozenset()
-        if leaf.ndim == 2:
+        if include_dW and leaf.ndim == 2:
             d_in, d_out = leaf.shape
             bmm = min(256, d_in)
             if d_in % bmm == 0:
@@ -83,10 +102,114 @@ def plan_update_fusion(params, *, tokens: int = 4096, max_ways: int = 3,
                                          tag="train:dW")
                 graph.append(planner.GraphOp(dw))
                 deps = frozenset({dw.name})
-        upd = adamw_op(R=R, dtype=leaf.dtype, bm=bm_i, name=f"adamw_{pname}")
+        upd = adamw_op(R=R, dtype=leaf.dtype, bm=bm_i, name=f"adamw_{pname}",
+                       b1=b1, b2=b2, eps=eps, wd=wd)
         graph.append(planner.GraphOp(upd, deps=deps))
+        layout.append((f"adamw_{pname}", path, n, R, bm_i))
+    return graph, layout
+
+
+def plan_update_fusion(params, *, tokens: int = 4096, max_ways: int = 3,
+                       bm: int = 1024, max_tensors: int = 8,
+                       measure=None, cache=None):
+    """Hand the optimizer's per-tensor update OpSpecs plus the backward dW
+    matmuls to ``planner.plan(max_ways>=3)`` — optimizer/backward overlap is
+    *planned*, not hand-wired (ROADMAP; docs/nway_fusion.md).
+
+    ``measure``/``cache`` flow through to the autotuner, so schedules are
+    profiled once (core/timing) and reused forever (core/schedule_cache).
+    Largest ``max_tensors`` parameters only — the tail adds launches the
+    multi-tensor Adam path already amortizes.
+    """
+    from repro.core import planner
+
+    graph, _ = update_graph(params, tokens=tokens, bm=bm,
+                            max_tensors=max_tensors, include_dW=True)
     return planner.plan(graph, max_ways=max_ways, measure=measure,
                         cache=cache)
+
+
+class UpdateProgram:
+    """The executed optimizer step: a ``FusionPlan`` over every param
+    leaf's AdamW op, lowered by ``core/executor`` — fused bundles run via
+    ``SearchResult.build()``, leftovers via ``run_single`` — with the
+    binding registry routing each op's operands to the flattened (R, 128)
+    views of its param/grad/moment leaves.  This is the planner-driven
+    generalization of ``kernels.adam.multi_tensor_adamw`` (the parity
+    baseline in tests/test_executor.py)."""
+
+    def __init__(self, plan, program, layout, hyper: dict):
+        self.plan = plan
+        self.program = program
+        self.layout = layout
+        self.hyper = hyper
+
+    def __call__(self, params, grads, m, v, *, lr, bc1, bc2):
+        from repro.kernels.adam import LANES, _flatten_leaf, _unflatten_leaf
+
+        leaves_p, treedef = jax.tree_util.tree_flatten(params)
+        leaves_g = treedef.flatten_up_to(grads)
+        leaves_m = treedef.flatten_up_to(m)
+        leaves_v = treedef.flatten_up_to(v)
+        scalars = jnp.zeros((1, LANES), jnp.float32)
+        scalars = scalars.at[0, 0].set(lr).at[0, 1].set(bc1).at[0, 2].set(bc2)
+
+        state = {"scalars": scalars}
+        for (name, _path, n, R, bm_i), lp, lg, lm, lv in zip(
+                self.layout, leaves_p, leaves_g, leaves_m, leaves_v):
+            state[f"{name}.p"], _ = _flatten_leaf(lp, row_multiple=bm_i)
+            state[f"{name}.g"], _ = _flatten_leaf(lg.astype(lp.dtype),
+                                                  row_multiple=bm_i)
+            state[f"{name}.m"], _ = _flatten_leaf(lm.astype(jnp.float32),
+                                                  row_multiple=bm_i)
+            state[f"{name}.v"], _ = _flatten_leaf(lv.astype(jnp.float32),
+                                                  row_multiple=bm_i)
+        state = self.program(state)
+        new_p, new_m, new_v = [], [], []
+        for (name, _path, n, _R, _bm_i), lp, lm, lv in zip(
+                self.layout, leaves_p, leaves_m, leaves_v):
+            new_p.append(_unflatten_leaf(state[f"{name}.p"], n, lp))
+            new_m.append(_unflatten_leaf(state[f"{name}.m"], n, lm))
+            new_v.append(_unflatten_leaf(state[f"{name}.v"], n, lv))
+        return (treedef.unflatten(new_p), treedef.unflatten(new_m),
+                treedef.unflatten(new_v))
+
+    def describe(self) -> list[dict]:
+        return self.program.describe()
+
+
+def build_update_program(params, ocfg: Optional[AdamWConfig] = None, *,
+                         bm: int = 1024, max_ways: int = 4,
+                         measure=None, cache=None,
+                         interpret: Optional[bool] = None) -> UpdateProgram:
+    """Plan + compile the executed optimizer step for ``params`` (live or
+    abstract).  All leaves participate — the executed step must update the
+    whole tree.  The dW matmuls are *planning-only* (their operands — the
+    backward's activations — are autodiff internals the update step never
+    sees live), so the executable graph holds the per-tensor update ops;
+    they fuse with each other (``allow_same_bound``: all memory-bound, the
+    gain is launch+ramp amortization — multi-tensor-apply rediscovered by
+    the planner).
+    """
+    from repro.core import executor, planner
+    from repro.core.binding import BindingRegistry
+
+    ocfg = ocfg or AdamWConfig()
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    graph, layout = update_graph(
+        params, bm=bm, max_tensors=None, include_dW=False,
+        b1=ocfg.b1, b2=ocfg.b2, eps=ocfg.eps, wd=ocfg.weight_decay)
+    plan = planner.plan(graph, max_ways=max_ways, allow_same_bound=True,
+                        measure=measure, cache=cache)
+    reg = BindingRegistry()
+    for name, *_ in layout:
+        reg.bind(name, scalars="scalars", p=f"{name}.p", g=f"{name}.g",
+                 m=f"{name}.m", v=f"{name}.v")
+    program = executor.compile_plan(plan, bindings=reg, interpret=interpret)
+    return UpdateProgram(plan, program, layout,
+                         hyper=dict(b1=ocfg.b1, b2=ocfg.b2, eps=ocfg.eps,
+                                    wd=ocfg.weight_decay))
 
 
 def _split_microbatches(batch: dict, n: int) -> dict:
@@ -107,7 +230,11 @@ def clip_by_global_norm(tree, max_norm: float):
                         tree), norm
 
 
-def make_train_step(cfg: ModelConfig, tcfg: TrainConfig, mesh=None) -> Callable:
+def make_train_step(cfg: ModelConfig, tcfg: TrainConfig, mesh=None,
+                    update_program: Optional[UpdateProgram] = None) -> Callable:
+    """``update_program`` (train_loop.build_update_program) routes the
+    optimizer step through the plan->program executor instead of the
+    hand-wired update paths — the `--plan-fusion` hot path."""
     loss_fn = functools.partial(lm.loss_fn, cfg, remat=tcfg.remat)
 
     def loss_wrap(params, batch):
@@ -141,7 +268,8 @@ def make_train_step(cfg: ModelConfig, tcfg: TrainConfig, mesh=None) -> Callable:
     def train_step(params, opt_state: OptState, batch, step):
         loss, aux, grads = compute_grads(params, batch)
         grads, gnorm = clip_by_global_norm(grads, tcfg.max_grad_norm)
-        new_params, new_opt = opt_mod.update(tcfg.optimizer, grads, opt_state, params)
+        new_params, new_opt = opt_mod.update(tcfg.optimizer, grads, opt_state,
+                                             params, program=update_program)
         metrics = {"loss": loss, "grad_norm": gnorm,
                    "lr": opt_mod.schedule(tcfg.optimizer, opt_state.count + 1)}
         if isinstance(aux, dict):

@@ -1,0 +1,396 @@
+"""Plan->program executor: interpret-mode ULP-tolerance parity of the
+executed train and serve hot paths against the hand-wired references,
+dep-forced leftover ops, zero-search replans, binding-contract errors,
+schedule-cache LRU ops, and the 2-op accessor deprecations."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import autotuner, binding, executor, hfuse, planner
+from repro.core.binding import BindingRegistry, Slot
+from repro.core.schedule_cache import ScheduleCache
+from repro.kernels.adam import adamw_op
+from repro.kernels.matmul import matmul_1d_op
+from repro.kernels.rmsnorm import rmsnorm_op
+
+
+# ---------------------------------------------------------------------------
+# executor core: ordering, dataflow, leftover ops, error contracts
+# ---------------------------------------------------------------------------
+def _dep_graph():
+    """dW -> adamw (dep-forced leftover: an update can never fuse with the
+    matmul producing its own gradient) + an independent fusible partner."""
+    dw = dataclasses.replace(
+        matmul_1d_op(M=128, K=64, N=128, dtype=jnp.float32, bm=64),
+        name="dW_t0", tag="train:dW")
+    upd = adamw_op(R=128, dtype=jnp.float32, bm=64, name="adamw_t0")
+    nrm = rmsnorm_op(R=256, d=128, dtype=jnp.float32, bm=64)
+    return dw, upd, nrm
+
+
+def _dep_bindings(nrm_name):
+    reg = BindingRegistry()
+    reg.bind("dW_t0", x="x", w="gy", out="g")
+    reg.bind("adamw_t0", scalars="scalars", p="p", g="g", m="m", v="v")
+    reg.bind(nrm_name, x="nx", scale="nscale", out="ny")
+    return reg
+
+
+def _dep_state():
+    ks = jax.random.split(jax.random.PRNGKey(0), 6)
+    return {
+        "x": jax.random.normal(ks[0], (128, 64)),
+        "gy": jax.random.normal(ks[1], (64, 128)) * 0.1,
+        "p": jax.random.normal(ks[2], (128, 128)),
+        "m": jnp.zeros((128, 128)), "v": jnp.zeros((128, 128)),
+        "scalars": (jnp.zeros((1, 128), jnp.float32)
+                    .at[0, 0].set(1e-3).at[0, 1].set(0.1).at[0, 2].set(0.05)),
+        "nx": jax.random.normal(ks[3], (256, 128)),
+        "nscale": jnp.zeros((1, 128), jnp.float32),
+    }
+
+
+def test_executor_dep_forced_leftover_and_dataflow():
+    """The graph's dep chain forces dW to stay a single (its only consumer
+    depends on it); the fused bundle executes via SearchResult.build();
+    live arrays route producer -> consumer through shared state keys."""
+    dw, upd, nrm = _dep_graph()
+    graph = [planner.GraphOp(dw),
+             planner.GraphOp(upd, deps=frozenset({"dW_t0"})),
+             planner.GraphOp(nrm)]
+    plan = planner.plan(graph, max_ways=3, allow_same_bound=True)
+    assert plan.fused, "no bundle admitted"
+    assert all("dW_t0" not in d.members for d in plan.fused)
+
+    prog = executor.compile_plan(plan, bindings=_dep_bindings(nrm.name),
+                                 interpret=True)
+    # the plan covers the graph exactly: every op launches exactly once
+    launched = [m for s in prog.steps for m in s.members]
+    assert sorted(launched) == sorted(g.op.name for g in graph)
+    assert prog.n_fused >= 1
+    # dW (single) must run before the bundle containing its consumer
+    pos = {m: i for i, s in enumerate(prog.steps) for m in s.members}
+    assert pos["dW_t0"] < pos["adamw_t0"]
+
+    state = _dep_state()
+    out = jax.jit(prog)(state)
+    g_ref = state["x"] @ state["gy"]
+    np.testing.assert_allclose(np.asarray(out["g"]), np.asarray(g_ref),
+                               rtol=1e-5, atol=1e-5)
+    m2, v2 = 0.1 * g_ref, 0.05 * g_ref * g_ref
+    p_ref = state["p"] - 1e-3 * ((m2 / 0.1) / (jnp.sqrt(v2 / 0.05) + 1e-8)
+                                 + 0.1 * state["p"])
+    np.testing.assert_allclose(np.asarray(out["p"]), np.asarray(p_ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_executor_requires_signatures_and_full_bindings():
+    from repro.kernels import paper_suite as ps
+    op, _, _ = ps.make_maxpool(R=256, C=128, bm=64)      # no signature
+    plan = planner.plan([planner.GraphOp(op)])
+    with pytest.raises(ValueError, match="no operand signature"):
+        executor.compile_plan(plan, bindings=BindingRegistry())
+
+    nrm = rmsnorm_op(R=256, d=128, dtype=jnp.float32, bm=64)
+    plan = planner.plan([planner.GraphOp(nrm)])
+    reg = BindingRegistry()
+    reg.bind(nrm.name, x="nx")                           # scale/out unbound
+    with pytest.raises(ValueError, match="unbound operands"):
+        executor.compile_plan(plan, bindings=reg)
+
+
+def test_executor_rejects_plan_graph_mismatch():
+    nrm = rmsnorm_op(R=256, d=128, dtype=jnp.float32, bm=64)
+    other = dataclasses.replace(nrm, name="other_norm")
+    plan = planner.plan([planner.GraphOp(nrm)])
+    with pytest.raises(ValueError, match="does not cover"):
+        executor.compile_plan(plan, graph=[planner.GraphOp(other)])
+
+
+def test_executor_default_bindings_roundtrip():
+    """default_bindings + synth_state: every named op executes standalone."""
+    nrm = rmsnorm_op(R=128, d=128, dtype=jnp.float32, bm=64)
+    plan = planner.plan([planner.GraphOp(nrm)])
+    prog = executor.compile_plan(
+        plan, bindings=binding.default_bindings([nrm]), interpret=True)
+    state = binding.synth_state([nrm])
+    out = prog(state)
+    x = state[f"{nrm.name}.x"].astype(jnp.float32)
+    ref = (x * jax.lax.rsqrt(jnp.mean(x * x, -1, keepdims=True) + 1e-6)
+           * (1.0 + state[f"{nrm.name}.scale"]))
+    np.testing.assert_allclose(np.asarray(out[f"{nrm.name}.out"]),
+                               np.asarray(ref), rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# executed train hot path
+# ---------------------------------------------------------------------------
+def _cfg():
+    from repro.configs import get_config
+    return dataclasses.replace(get_config("granite-3-2b").reduced(),
+                               dtype="float32")
+
+
+@pytest.fixture(scope="module")
+def train_setup():
+    from repro.models import lm
+    from repro.train import optimizer as opt_mod
+    cfg = _cfg()
+    params = lm.init(cfg, jax.random.PRNGKey(0))
+    return cfg, params, opt_mod.init(params)
+
+
+def test_executed_update_matches_jnp_and_multi_tensor_adam(train_setup):
+    """ULP-tolerance: the planned-and-executed optimizer step == the pure-jnp
+    AdamW == the hand-wired multi-tensor Adam kernel, over the full tree."""
+    from repro.kernels.adam import multi_tensor_adamw
+    from repro.train import optimizer as opt_mod
+    from repro.train.optimizer import AdamWConfig
+    from repro.train.train_loop import build_update_program
+
+    cfg, params, opt = train_setup
+    ocfg = AdamWConfig()
+    grads = jax.tree.map(lambda p: p * 0.01 + 0.001, params)
+    prog = build_update_program(
+        jax.eval_shape(lambda: jax.tree.map(lambda x: x, params)), ocfg)
+    assert prog.program.n_fused >= 1, "update program found no bundle"
+    # every leaf's update goes through the executor — none hand-wired
+    launched = [m for s in prog.program.steps for m in s.members]
+    assert len(launched) == len(jax.tree.leaves(params))
+
+    p_ref, s_ref = opt_mod.update(ocfg, grads, opt, params)
+    p_exe, s_exe = opt_mod.update(ocfg, grads, opt, params, program=prog)
+    for a, b in zip(jax.tree.leaves(p_ref), jax.tree.leaves(p_exe)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-6)
+    for tree_ref, tree_exe in ((s_ref.m, s_exe.m), (s_ref.v, s_exe.v)):
+        for a, b in zip(jax.tree.leaves(tree_ref), jax.tree.leaves(tree_exe)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-5, atol=1e-6)
+
+    cnt = opt.count + 1
+    sc = (jnp.zeros((1, 128), jnp.float32)
+          .at[0, 0].set(opt_mod.schedule(ocfg, cnt))
+          .at[0, 1].set(1 - ocfg.b1 ** cnt.astype(jnp.float32))
+          .at[0, 2].set(1 - ocfg.b2 ** cnt.astype(jnp.float32)))
+    mp, _, _ = multi_tensor_adamw(params, grads, opt.m, opt.v, sc,
+                                  interpret=True)
+    for a, b in zip(jax.tree.leaves(mp), jax.tree.leaves(p_exe)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-6, atol=1e-7)
+
+
+def test_executed_train_step_end_to_end(train_setup):
+    """A whole jitted train step routed through the executor still learns
+    (and matches the hand-wired step bit-for-bit-ish on one step)."""
+    from repro.data.pipeline import DataConfig, TokenPipeline
+    from repro.train.optimizer import AdamWConfig
+    from repro.train.train_loop import (TrainConfig, build_update_program,
+                                        make_train_step)
+
+    cfg, params, opt = train_setup
+    tcfg = TrainConfig(optimizer=AdamWConfig(lr=1e-3, warmup_steps=1,
+                                             total_steps=10), remat=False)
+    prog = build_update_program(
+        jax.eval_shape(lambda: jax.tree.map(lambda x: x, params)),
+        tcfg.optimizer)
+    step_ref = jax.jit(make_train_step(cfg, tcfg))
+    step_exe = jax.jit(make_train_step(cfg, tcfg, update_program=prog))
+    data = TokenPipeline(DataConfig(vocab_size=cfg.vocab_size, seq_len=16,
+                                    global_batch=4))
+    batch = jax.tree.map(jnp.asarray, data.batch_at(0))
+    p_ref, o_ref, m_ref = step_ref(params, opt, batch, jnp.asarray(0))
+    p_exe, o_exe, m_exe = step_exe(params, opt, batch, jnp.asarray(0))
+    assert float(m_ref["loss"]) == pytest.approx(float(m_exe["loss"]), abs=1e-5)
+    for a, b in zip(jax.tree.leaves(p_ref), jax.tree.leaves(p_exe)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-5, atol=2e-6)
+
+
+def test_update_program_replan_zero_searches(tmp_path, train_setup):
+    """Rebuilding the executed update program for an unchanged tree performs
+    ZERO new searches — the SEARCH_COUNT acceptance hook."""
+    from repro.train.optimizer import AdamWConfig
+    from repro.train.train_loop import build_update_program
+
+    cfg, params, _ = train_setup
+    cache = ScheduleCache(tmp_path / "sched.json")
+    abstract = jax.eval_shape(lambda: jax.tree.map(lambda x: x, params))
+    p1 = build_update_program(abstract, AdamWConfig(), cache=cache)
+    n = autotuner.SEARCH_COUNT
+    p2 = build_update_program(abstract, AdamWConfig(), cache=cache)
+    assert autotuner.SEARCH_COUNT == n, "replan re-searched a bundle"
+    assert [s.members for s in p1.program.steps] == \
+        [s.members for s in p2.program.steps]
+
+
+# ---------------------------------------------------------------------------
+# executed serve hot path
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def serve_setup():
+    from repro.models import lm
+    from repro.serve.engine import ServeEngine
+    cfg = _cfg()
+    params = lm.init(cfg, jax.random.PRNGKey(0))
+    eng = ServeEngine(cfg, params, batch=2, max_len=40, plan_fusion=True)
+    return cfg, params, eng
+
+
+def test_executed_decode_step_matches_lm_decode(serve_setup):
+    """ULP tolerance: the planned norm->attention->FFN program (with the
+    model glue in the binding slots) == lm.decode_step."""
+    from repro.models import lm
+    cfg, params, eng = serve_setup
+    assert eng.executed
+    toks = jnp.stack([jnp.arange(1, 9, dtype=jnp.int32),
+                      jnp.arange(3, 11, dtype=jnp.int32)])
+    cache, logits = lm.prefill(cfg, params, {"tokens": toks},
+                               max_len=eng.max_len)
+    cur = jnp.argmax(logits, -1)
+    for _ in range(3):
+        out_ref, cache_ref = lm.decode_step(cfg, params, cache, cur)
+        out_exe, cache_exe = eng._decode(params, cache, cur)
+        np.testing.assert_allclose(np.asarray(out_exe), np.asarray(out_ref),
+                                   rtol=1e-4, atol=2e-5)
+        run = [k for k in cache_ref if k != "pos"][0]
+        for kk in ("k", "v"):
+            np.testing.assert_allclose(np.asarray(cache_exe[run][kk]),
+                                       np.asarray(cache_ref[run][kk]),
+                                       rtol=1e-5, atol=1e-5)
+        cache = cache_exe
+        cur = jnp.argmax(out_exe, -1)
+
+
+def test_executed_engine_tokens_match_handwired(serve_setup):
+    """Whole-engine parity across multiple waves: the executed decode (and
+    the chunked co-prefill of the pending wave, fused with decode
+    attention) produces the same tokens as the hand-wired engine."""
+    from repro.serve.engine import Request, ServeEngine
+    cfg, params, eng = serve_setup
+    prompts = [np.arange(1, 9, dtype=np.int32),
+               np.arange(3, 11, dtype=np.int32),
+               np.arange(5, 17, dtype=np.int32),
+               np.arange(2, 14, dtype=np.int32)]
+    reqs_h = [Request(rid=i, prompt=p, max_new_tokens=4)
+              for i, p in enumerate(prompts)]
+    reqs_e = [Request(rid=i, prompt=p, max_new_tokens=4)
+              for i, p in enumerate(prompts)]
+    ServeEngine(cfg, params, batch=2, max_len=40).run(reqs_h)
+    eng.run(reqs_e)
+    assert [r.out_tokens for r in reqs_e] == [r.out_tokens for r in reqs_h]
+    # two prompt lengths -> the mixed (co-prefill) step really compiled
+    assert eng._mixed_steps, "co-prefill path never exercised"
+
+
+def test_serve_mixed_program_fuses_prefill_with_decode_attention(serve_setup):
+    """The mixed program's fused bundle pairs the memory-bound cache
+    streaming with the prefill chunk's FFN matmul — and no graph op is
+    left hand-wired (every member launches via the executor)."""
+    _cfg_, _params, eng = serve_setup
+    prog = eng.build_decode_program(prefill_rows=128)
+    assert prog.n_fused >= 1
+    fused_members = [m for s in prog.steps if s.fused for m in s.members]
+    assert "prefill_ffn" in fused_members
+    assert any(m.startswith("decode_attn") for m in fused_members)
+    launched = sorted(m for s in prog.steps for m in s.members)
+    assert launched == sorted(g.op.name for g in prog.graph)
+
+
+def test_decode_program_replan_zero_searches(tmp_path, serve_setup):
+    cfg, params, _eng = serve_setup
+    from repro.serve.engine import ServeEngine
+    cache = ScheduleCache(tmp_path / "sched.json")
+    e1 = ServeEngine(cfg, params, batch=2, max_len=40, plan_fusion=True,
+                     schedule_cache=cache)
+    n = autotuner.SEARCH_COUNT
+    e2 = ServeEngine(cfg, params, batch=2, max_len=40, plan_fusion=True,
+                     schedule_cache=cache)
+    assert autotuner.SEARCH_COUNT == n, "engine restart re-searched"
+    assert e1.executed and e2.executed
+
+
+def test_unsupported_config_falls_back_to_handwired():
+    from repro.models import lm
+    from repro.serve.engine import (Request, ServeEngine,
+                                    executable_decode_supported)
+    from repro.configs import get_config
+    cfg = dataclasses.replace(get_config("recurrentgemma-2b").reduced(),
+                              dtype="float32")
+    assert executable_decode_supported(cfg) is not None
+    params = lm.init(cfg, jax.random.PRNGKey(0))
+    eng = ServeEngine(cfg, params, batch=2, max_len=32, plan_fusion=True)
+    assert not eng.executed
+    reqs = [Request(rid=0, prompt=np.arange(1, 7, dtype=np.int32),
+                    max_new_tokens=2)]
+    eng.run(reqs)
+    assert len(reqs[0].out_tokens) == 2
+
+
+# ---------------------------------------------------------------------------
+# deprecated 2-op accessors
+# ---------------------------------------------------------------------------
+def test_two_op_compat_accessors_warn():
+    nrm = rmsnorm_op(R=128, d=128, dtype=jnp.float32, bm=64)
+    mm = matmul_1d_op(M=128, K=128, N=128, dtype=jnp.float32, bm=64)
+    res = autotuner.search((nrm, mm))
+    with pytest.warns(DeprecationWarning, match="SearchResult"):
+        assert res.a is res.ops[0]
+    with pytest.warns(DeprecationWarning, match="SearchResult"):
+        assert res.b is res.ops[1]
+    plan = planner.plan([planner.GraphOp(nrm), planner.GraphOp(mm)],
+                        allow_same_bound=True)
+    if plan.fused:
+        with pytest.warns(DeprecationWarning, match="FusionDecision"):
+            assert plan.fused[0].a == plan.fused[0].members[0]
+
+
+# ---------------------------------------------------------------------------
+# schedule-cache ops (LRU bound + usage stats + CLI)
+# ---------------------------------------------------------------------------
+def test_schedule_cache_lru_eviction_and_bound_persists(tmp_path):
+    path = tmp_path / "sched.json"
+    c = ScheduleCache(path, max_entries=2)
+    for i in range(4):
+        c.put(f"k{i}", {"ratios": [1], "members": [f"m{i}"]})
+    assert len(c.entries) == 2 and c.evictions == 2
+    assert set(c.entries) == {"k2", "k3"}
+    c.get("k2")                                   # touch -> most recent
+    c.put("k9", {"ratios": [2], "members": ["m9"]})
+    assert set(c.entries) == {"k2", "k9"}         # LRU victim was k3
+    fresh = ScheduleCache(path, max_entries=2)    # bound survives the merge
+    assert set(fresh.entries) == {"k2", "k9"}
+    st = fresh.stats()
+    assert st["entries"] == 2
+    assert st["stale_never_reused"] == 1          # k9 never re-consulted
+
+
+def test_cache_usage_persists_for_pure_hit_replan(tmp_path):
+    """A plan() burst of pure cache hits must still persist usage bumps —
+    cache-inspect's staleness signal depends on it."""
+    nrm = rmsnorm_op(R=128, d=128, dtype=jnp.float32, bm=64)
+    mm = matmul_1d_op(M=128, K=128, N=128, dtype=jnp.float32, bm=64)
+    graph = [planner.GraphOp(nrm), planner.GraphOp(mm)]
+    path = tmp_path / "sched.json"
+    planner.plan(graph, allow_same_bound=True, cache=ScheduleCache(path))
+    planner.plan(graph, allow_same_bound=True, cache=ScheduleCache(path))
+    fresh = ScheduleCache(path)
+    assert any(m.get("uses", 0) > 0 for m in fresh.meta.values())
+
+
+def test_tools_cache_inspect_cli(tmp_path, capsys):
+    from repro import tools
+    path = tmp_path / "sched.json"
+    nrm = rmsnorm_op(R=128, d=128, dtype=jnp.float32, bm=64)
+    mm = matmul_1d_op(M=128, K=128, N=128, dtype=jnp.float32, bm=64)
+    autotuner.search((nrm, mm), cache=ScheduleCache(path))
+    assert tools.main(["cache-inspect", "--cache", str(path), "--json"]) == 0
+    import json
+    blob = json.loads(capsys.readouterr().out)
+    assert blob["stats"]["entries"] == 1
+    assert blob["entries"][0]["members"]
+    assert tools.main(["cache-inspect", "--cache", str(path)]) == 0
+    assert "schedule cache" in capsys.readouterr().out

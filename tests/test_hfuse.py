@@ -139,7 +139,7 @@ def test_planner_pairs_and_rejections():
         op, _, _ = f()
         ops_list.append(planner.GraphOp(op))
     plan = planner.plan(ops_list)
-    fused_names = {frozenset((d.a, d.b)) for d in plan.fused}
+    fused_names = {frozenset(d.members) for d in plan.fused}
     # both memory-bound ops get compute partners
     assert any("ethash_like" in p for p in fused_names)
     assert any("upsample" in p for p in fused_names)
