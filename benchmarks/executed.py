@@ -14,9 +14,17 @@ live operands:
                  decode attention (fused with the prefill chunk's FFN
                  in-projection) -> norm -> FFN projection over a live KV
                  cache.
+  serve_continuous — the continuous-batching engine under a staggered
+                 Poisson-ish arrival trace: tokens/sec, slot occupancy and
+                 the fraction of decode steps carrying a fused mixed
+                 prefill⊕decode bundle (must be >= 80%: the steady mixed
+                 graph, not wave-boundary-only), token-for-token verified
+                 against the legacy wavefront engine, with a zero-new-
+                 searches replan over the shared schedule cache.
 
 Each program is verified against the hand-wired reference (jnp oracles /
-``run_single`` chains) and wall-clocked against the native one-launch-per-op
+``run_single`` chains / the wavefront differential oracle) and the
+launch-level rows are wall-clocked against the native one-launch-per-op
 baseline; the rows land in ``BENCH_executed_<backend>_<git-sha>.json``
 (interpret timings are code-path exercise, not performance claims — the
 numerics columns are the CI signal there).
@@ -174,15 +182,114 @@ def _serve_decode_row(interpret: bool) -> dict:
     }
 
 
+def _serve_continuous_row(interpret: bool) -> dict:
+    import tempfile
+    import time as _time
+
+    import jax
+    import numpy as np
+
+    from repro.configs import get_config
+    from repro.core import autotuner
+    from repro.core.schedule_cache import ScheduleCache
+    from repro.models import lm
+    from repro.serve.engine import Request, ServeEngine
+
+    cfg = dataclasses.replace(get_config("granite-3-2b").reduced(),
+                              dtype="float32")
+    params = lm.init(cfg, jax.random.PRNGKey(0))
+
+    def make_requests():
+        # staggered lengths + short decorrelated budgets + Poisson-ish
+        # arrivals: slots retire every 1-2 steps, so nearly every decode
+        # iteration carries a refill's prefill chunk (the steady mixed graph)
+        rng = np.random.default_rng(7)
+        arrive = 0.0
+        reqs = []
+        for i in range(24):
+            arrive += rng.exponential(0.3)
+            reqs.append(Request(
+                rid=i,
+                prompt=rng.integers(1, cfg.vocab_size,
+                                    (8, 12)[i % 2]).astype(np.int32),
+                max_new_tokens=int(rng.integers(2, 4)),
+                arrival=int(arrive)))
+        return reqs
+
+    with tempfile.TemporaryDirectory() as td:
+        sched = ScheduleCache(Path(td) / "sched.json")
+        eng = ServeEngine(cfg, params, batch=3, max_len=64, plan_fusion=True,
+                          scheduling="continuous", schedule_cache=sched)
+        assert eng.executed, "reduced granite must support the executed decode"
+        reqs = make_requests()
+        t0 = _time.perf_counter()
+        eng.run(reqs)
+        dt = _time.perf_counter() - t0
+        st = eng.stats
+
+        # differential oracle: the legacy wavefront engine on the same set
+        ref = make_requests()
+        ServeEngine(cfg, params, batch=3, max_len=64,
+                    scheduling="wavefront").run(ref)
+        mismatch = sum(a.out_tokens != b.out_tokens
+                       for a, b in zip(reqs, ref))
+
+        # replan over the shared cache: zero new autotuner searches
+        n = autotuner.SEARCH_COUNT
+        eng2 = ServeEngine(cfg, params, batch=3, max_len=64,
+                           plan_fusion=True, scheduling="continuous",
+                           schedule_cache=sched)
+        eng2.run(make_requests())
+        new_searches = autotuner.SEARCH_COUNT - n
+
+    # the launch table of one of the mixed programs that actually ran
+    mixed_infos = [info for p, info in eng.cb_program_info.items() if p]
+    assert mixed_infos, \
+        "arrival trace never compiled an executed mixed (refill) program"
+    return {
+        "program": "serve_continuous",
+        **mixed_infos[0],
+        "token_mismatches": int(mismatch),   # vs the wavefront oracle
+        "executed_s": dt,
+        "tokens_per_s": st.tokens / max(dt, 1e-9),
+        "slot_occupancy": st.occupancy,
+        "mixed_step_fraction": st.mixed_fraction,
+        "fused_mixed_fraction": st.fused_mixed_steps / max(st.decode_steps,
+                                                           1),
+        "fused_mixed_steps": st.fused_mixed_steps,
+        "decode_steps": st.decode_steps,
+        "replan_new_searches": int(new_searches),
+        "slot_trace": st.describe(),
+    }
+
+
 def run(backend: str = "interpret", out_path: str | None = None) -> dict:
     interpret = backend != "tpu" and backend != "gpu"
-    rows = [_train_update_row(interpret), _serve_decode_row(interpret)]
+    rows = [_train_update_row(interpret), _serve_decode_row(interpret),
+            _serve_continuous_row(interpret)]
     for r in rows:
-        assert r["max_err"] < 2e-4, (r["program"], r["max_err"])
+        if "max_err" in r:
+            assert r["max_err"] < 2e-4, (r["program"], r["max_err"])
+        assert r.get("token_mismatches", 0) == 0, (
+            r["program"], f"{r['token_mismatches']} streams diverged from "
+            "the wavefront oracle")
         assert r["fused_launches"] >= 1, r["program"]
+        err = (f"max_err {r['max_err']:.1e}" if "max_err" in r
+               else f"{r['token_mismatches']} token mismatches")
         print(f"# executed {r['program']}: {r['fused_launches']} fused / "
-              f"{r['total_launches']} launches, max_err {r['max_err']:.1e}, "
+              f"{r['total_launches']} launches, {err}, "
               f"executed {r['executed_s'] * 1e3:.1f}ms")
+    cont = rows[-1]
+    # gate the FUSED fraction: a refill only counts when its prefill chunk
+    # verifiably shared a fused launch with decode attention
+    assert cont["fused_mixed_fraction"] >= 0.8, (
+        "continuous batching must keep the planner on a FUSED mixed "
+        "prefill⊕decode bundle on >=80% of decode steps, got "
+        f"{cont['fused_mixed_fraction']:.0%}")
+    assert cont["replan_new_searches"] == 0, "replan re-searched a bundle"
+    print(f"# continuous: {cont['tokens_per_s']:.1f} tok/s, occupancy "
+          f"{cont['slot_occupancy']:.0%}, fused mixed bundle on "
+          f"{cont['fused_mixed_fraction']:.0%} of decode steps")
     report = {"backend": backend, "git_sha": git_sha(), "rows": rows}
     out = Path(out_path or f"BENCH_executed_{backend}_{report['git_sha']}.json")
     out.write_text(json.dumps(report, indent=1))

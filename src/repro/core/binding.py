@@ -9,8 +9,11 @@ a **state pytree** — a flat ``dict[str, Array]`` threaded through the
 program.  Dataflow between ops is expressed by key sharing (op A's output
 slot writes the key op B's input slot reads), and framework glue (a QKV
 projection between a norm and the attention that consumes it, a residual
-add, a reshape into the optimizer's flat (R, 128) layout) lives in the
-slots themselves — pure-jnp closures, so a compiled program stays jittable.
+add, a reshape into the optimizer's flat (R, 128) layout, the serve
+engine's per-slot cache-position vector — RoPE at ``pos[b]``, a k/v
+scatter into row ``pos[b]``, and the vectorized (B, 1) ``len`` operand
+read as ``pos + 1`` — docs/serving.md) lives in the slots themselves —
+pure-jnp closures, so a compiled program stays jittable.
 
 Three slot forms, in increasing power:
 

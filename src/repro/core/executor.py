@@ -76,6 +76,13 @@ class Program:
     def n_fused(self) -> int:
         return sum(1 for s in self.steps if s.fused)
 
+    @property
+    def fused_members(self) -> list[tuple[str, ...]]:
+        """Member names of each fused launch — the co-residency record
+        (e.g. the serve engine checks a prefill chunk actually shares a
+        launch with decode attention before counting a step as fused-mixed)."""
+        return [s.members for s in self.steps if s.fused]
+
 
 def _toposort(nodes: dict[int, set[int]], order: Sequence[int]) -> list[int]:
     """Kahn's algorithm, stable in the given node order."""

@@ -125,24 +125,37 @@ def make_operand(arr_or_sds, block_shape, index_map) -> Operand:
 MIN_BLOCK_ROWS = 8                # TPU sublane floor (f32 tile is (8, 128))
 
 
-def _index_pattern(operand: Operand) -> Optional[str]:
-    """Classify an index map by probing it with small concrete steps.
+def _index_pattern(operand: Operand, grid: int = 8) -> Optional[str]:
+    """Classify an index map by probing it with concrete steps sampled
+    across the whole ``grid``.
 
     'const'  — same block every step (broadcast operand: weights, carries).
     'stream' — unit-stride in the leading axis, (s, c1, ..) with the other
                components constant: the row-partitioned streaming pattern
                every shrinkable op in this repo uses.
     None     — anything else (opaque/affine maps): not safely rewritable.
+
+    The probe sample must include late steps: batch-major maps like
+    ``s // nk`` (decode attention's per-slot operands) are constant over
+    the first ``nk`` steps and would masquerade as 'const' under a probe
+    of small steps only — misclassifying a streamed operand as a
+    broadcast would let ``shrink_blocks`` silently break the body's slot
+    addressing.  Probing {grid//2, grid-1} alongside {0, 1, 2} rules that
+    out for every monotone map at any ``nk``; the small steps are probed
+    even past a tiny grid (pure extrapolation) so grid-1 streaming ops
+    still classify as 'stream' and keep their halved-block variant.
     """
+    steps = sorted({0, 1, 2, grid // 2, max(grid - 1, 0)})
     try:
-        probes = [tuple(int(c) for c in operand.index_map(s))
-                  for s in (0, 1, 2)]
+        probes = {s: tuple(int(c) for c in operand.index_map(s))
+                  for s in steps}
     except Exception:
         return None
-    if probes[0] == probes[1] == probes[2]:
+    first = probes[0]
+    if all(p == first for p in probes.values()):
         return "const"
-    if (all(p[0] == s for s, p in enumerate(probes))
-            and all(p[1:] == probes[0][1:] for p in probes)):
+    if (all(p[0] == s for s, p in probes.items())
+            and all(p[1:] == first[1:] for p in probes.values())):
         return "stream"
     return None
 
@@ -170,7 +183,7 @@ def shrink_blocks(op: OpSpec, factor: int = 2) -> Optional[OpSpec]:
         return op.shrink(factor)
 
     operands = (*op.inputs, *op.outputs)
-    patterns = [_index_pattern(o) for o in operands]
+    patterns = [_index_pattern(o, op.grid) for o in operands]
     if any(p is None for p in patterns):
         return None
     stream_leads = {o.block_shape[0]

@@ -28,9 +28,12 @@ def decode_attention_op(B: int, S: int, H: int, Hkv: int, D: int,
 
     Grid: B * (S // ck) steps, batch-major.  `length` (static) masks the
     valid cache prefix; None = full cache.  ``dynamic_length`` instead adds
-    a tiny (1, 1) int32 operand ("len", constant index map — fetched once)
-    holding the valid prefix, so one compiled kernel serves every decode
-    position — the form the executor binds to a live ``pos + 1``.
+    a tiny (B, 1) int32 operand ("len", one row per batch slot, fetched as a
+    (1, 1) block by the batch-major index map) holding each slot's valid
+    prefix, so one compiled kernel serves every decode position of every
+    slot independently — the form the executor binds to a live per-slot
+    ``pos + 1`` vector (continuous batching: slots advance, finish and
+    refill at unrelated cache positions within one launch).
     """
     assert S % ck == 0 and H % Hkv == 0
     assert not (dynamic_length and length is not None)
@@ -75,7 +78,7 @@ def decode_attention_op(B: int, S: int, H: int, Hkv: int, D: int,
             o_ref[0] = o_ref[0] / jnp.maximum(l_ref[0], 1e-30)
 
     itemsize = jnp.dtype(dtype).itemsize
-    len_in = ((Operand((1, 1), jnp.int32, (1, 1), lambda s: (0, 0)),)
+    len_in = ((Operand((B, 1), jnp.int32, (1, 1), lambda s: (s // nk, 0)),)
               if dynamic_length else ())
     return OpSpec(
         name=f"decode_attn_B{B}_S{S}_H{H}kv{Hkv}", grid=B * nk, body=body,

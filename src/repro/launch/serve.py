@@ -2,6 +2,13 @@
 
   PYTHONPATH=src python -m repro.launch.serve --arch granite-3-2b \
       --requests 12 --prompt-len 16 --max-new 8
+
+Default scheduling is continuous batching (per-slot cache positions;
+docs/serving.md): slots retire and refill independently every iteration,
+so ``--stagger`` (prompt-length/budget spread) and ``--arrival-rate``
+(Poisson-ish arrival trace) exercise the steady mixed prefill⊕decode
+graph.  ``--scheduling wavefront`` runs the legacy lock-step engine — the
+differential oracle (tests/test_serve_continuous.py).
 """
 from __future__ import annotations
 
@@ -16,6 +23,28 @@ from repro.models import lm
 from repro.serve.engine import Request, ServeEngine
 
 
+def build_requests(cfg, args) -> list[Request]:
+    """Deterministic request trace: ``--stagger`` spreads prompt lengths
+    and token budgets so retirement/refill actually triggers mid-batch;
+    ``--arrival-rate`` > 0 draws Poisson-ish (exponential-gap) arrivals."""
+    rng = np.random.default_rng(args.seed)
+    arrivals = np.zeros(args.requests)
+    if args.arrival_rate > 0:
+        arrivals = np.floor(np.cumsum(
+            rng.exponential(1.0 / args.arrival_rate, args.requests)))
+    reqs = []
+    for i in range(args.requests):
+        spread = i % max(1, args.stagger)
+        plen = args.prompt_len + spread
+        reqs.append(Request(
+            rid=i,
+            prompt=rng.integers(0, cfg.vocab_size, plen).astype(np.int32),
+            max_new_tokens=max(1, args.max_new - spread),
+            temperature=args.temperature,
+            arrival=int(arrivals[i])))
+    return reqs
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
@@ -25,6 +54,20 @@ def main(argv=None):
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--scheduling", choices=["continuous", "wavefront"],
+                    default="continuous",
+                    help="continuous = per-slot cache positions with "
+                         "iteration-level refill (default); wavefront = "
+                         "legacy lock-step waves")
+    ap.add_argument("--stagger", type=int, default=1,
+                    help="spread request i's prompt length by +(i %% N) and "
+                         "its budget by -(i %% N): staggers retirements so "
+                         "slots refill mid-batch")
+    ap.add_argument("--arrival-rate", type=float, default=0.0,
+                    help="mean request arrivals per engine step (0 = all "
+                         "requests queued at step 0); Poisson-ish trace "
+                         "for the occupancy report")
+    ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--plan-fusion", action="store_true",
                     help="plan the decode-step fusion bundle "
                          "(RMSNorm + decode attention + router/FFN)")
@@ -48,9 +91,11 @@ def main(argv=None):
         measure = make_measure(args.measure) if args.measure else None
         schedule_cache = default_cache()
     engine = ServeEngine(cfg, params, batch=args.batch,
-                         max_len=args.prompt_len + args.max_new + 8,
+                         max_len=args.prompt_len + args.stagger
+                         + args.max_new + 8,
                          plan_fusion=args.plan_fusion, measure=measure,
-                         schedule_cache=schedule_cache)
+                         schedule_cache=schedule_cache,
+                         scheduling=args.scheduling)
     if engine.fusion_plan is not None:
         print("[plan-fusion] decode-step bundles:")
         for row in engine.fusion_plan.summary():
@@ -59,19 +104,19 @@ def main(argv=None):
               + ("EXECUTES through the plan->program executor "
                  "(core/executor)" if engine.executed
                  else "falls back to the hand-wired path"))
-    rng = np.random.default_rng(0)
-    reqs = [Request(rid=i,
-                    prompt=rng.integers(0, cfg.vocab_size,
-                                        args.prompt_len).astype(np.int32),
-                    max_new_tokens=args.max_new,
-                    temperature=args.temperature)
-            for i in range(args.requests)]
+    reqs = build_requests(cfg, args)
     t0 = time.time()
     engine.run(reqs)
     dt = time.time() - t0
     total_new = sum(len(r.out_tokens) for r in reqs)
     print(f"served {len(reqs)} requests, {total_new} tokens "
           f"in {dt:.2f}s ({total_new / dt:.1f} tok/s)")
+    if args.scheduling == "continuous":
+        st = engine.stats
+        print(f"[slots] {st.describe()}")
+        print(f"[slots] occupancy {st.occupancy:.0%}, mixed prefill⊕decode "
+              f"on {st.mixed_fraction:.0%} of decode steps "
+              f"({st.fused_mixed_steps} in a fused launch)")
     for r in reqs[:3]:
         print(f"  req {r.rid}: {r.out_tokens}")
 

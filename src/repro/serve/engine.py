@@ -1,29 +1,39 @@
-"""Batched serving engine (iteration-level batching with refill).
+"""Batched serving engine: continuous batching with per-slot cache positions.
 
-Semantics: up to ``batch`` requests run in lock-step — prompts are
-right-aligned/padded, prefilled with the batched ``lm.prefill``, then decoded
-together; finished sequences are masked out and the batch refills at the next
-wavefront.  Per-slot-position continuous batching would need a vectorized
-cache position (B,) — noted as an extension in DESIGN.md; iteration-level
-batching is what the assigned decode shapes (uniform context length) model.
+Semantics (``scheduling="continuous"``, the default): the engine keeps a
+per-slot cache-position vector ``(B,)`` plus per-slot active masks, so every
+slot advances, finishes (EOS / token budget / cache-full) and is refilled
+independently at every iteration.  A waiting request's prompt is prefilled
+*alongside* the decode step that runs in the same iteration — the planner
+therefore sees a mixed prefill⊕decode op graph on (nearly) every step, not
+only at wave boundaries.  The slot lifecycle, the ``(B,)`` position
+contract and the fallback rules are documented in docs/serving.md.
+
+The legacy wavefront scheduler (``scheduling="wavefront"``) is retained:
+requests are grouped by prompt length into lock-step waves and the batch
+only refills when a whole wave finishes.  It is the differential oracle the
+continuous engine is tested against (tests/test_serve_continuous.py).
 
 Fusion execution (``plan_fusion=True``): the decode step is *planned* by
 ``plan_decode_fusion`` and *executed* through the plan->program executor
 (core/executor) — the norm -> decode-attention -> FFN-projection chain runs
-as Pallas kernels routed by a binding registry over the live wave state
+as Pallas kernels routed by a binding registry over the live slot state
 (hidden activations, the KV-cache blocks, the layer weights), with the
-model glue (QKV projection, RoPE, residuals, gating, head) living in the
-binding setters.  When another wave is waiting, its prompt's FFN
-in-projection — the compute-bound partner the planner pairs with the
-memory-bound cache streaming — rides in the same fused launch, and the
-rest of that wave's prefill completes in the same jitted step: chunked
-prefill⊕decode co-execution, the dual-stream mode with *used* outputs.
-Configs outside the supported shape (multi-run stacks, MoE, non-RMSNorm)
-fall back to the hand-wired ``lm.decode_step`` with a notice.
+model glue (QKV projection, per-slot RoPE, per-slot cache scatter,
+residuals, gating, head) living in the binding setters.  Decode attention
+reads each slot's valid prefix from a vectorized ``(B, 1)`` int32 operand,
+so one compiled kernel serves every mix of slot positions.  When a request
+is waiting, its prompt's FFN in-projection — the compute-bound partner the
+planner pairs with the memory-bound cache streaming — rides in the same
+fused launch, and the rest of that prompt's prefill completes in the same
+jitted step: chunked prefill⊕decode co-execution, the dual-stream mode
+with *used* outputs.  Configs outside the supported shape (multi-run
+stacks, MoE, non-RMSNorm) fall back to the hand-wired ``lm.decode_step``
+with a notice (``executable_decode_supported`` returns the reason; see
+docs/serving.md §Fallback).
 
-On the production mesh the cache is sequence-sharded and decode attention is
-the distributed flash-decode (DESIGN.md §7).  ``examples/dual_stream_decode.py``
-shows the horizontal-fusion dual-stream variant of the decode step.
+``examples/dual_stream_decode.py`` shows the horizontal-fusion dual-stream
+variant of the decode step.
 """
 from __future__ import annotations
 
@@ -46,8 +56,49 @@ class Request:
     max_new_tokens: int = 32
     temperature: float = 0.0
     eos_token: Optional[int] = None
+    arrival: int = 0                   # engine step at which the request is
+    #                                    visible to the slot manager
+    #                                    (continuous scheduling only)
     out_tokens: list = field(default_factory=list)
     done: bool = False
+
+
+@dataclass
+class ServeStats:
+    """Slot-manager trajectory of one continuous-batching ``run()``."""
+    batch: int
+    steps: int = 0                # engine iterations (incl. idle/prefill-only)
+    decode_steps: int = 0         # iterations that decoded >= 1 active slot
+    mixed_steps: int = 0          # decode iterations that also carried a
+    #                               prefill chunk (the steady mixed graph)
+    fused_mixed_steps: int = 0    # mixed iterations whose program fused the
+    #                               prefill chunk with decode attention
+    prefill_only_steps: int = 0   # admissions with no active slot to decode
+    slot_steps: int = 0           # sum of active slots over decode iterations
+    tokens: int = 0
+    admissions: list = field(default_factory=list)   # (step, rid, slot)
+    retirements: list = field(default_factory=list)  # (step, rid, reason)
+
+    @property
+    def occupancy(self) -> float:
+        """Mean fraction of slots decoding per decode iteration."""
+        return self.slot_steps / max(self.batch * self.decode_steps, 1)
+
+    @property
+    def mixed_fraction(self) -> float:
+        """Fraction of decode iterations that carried a prefill partner."""
+        return self.mixed_steps / max(self.decode_steps, 1)
+
+    def describe(self) -> dict:
+        return {
+            "steps": self.steps, "decode_steps": self.decode_steps,
+            "mixed_steps": self.mixed_steps,
+            "fused_mixed_steps": self.fused_mixed_steps,
+            "prefill_only_steps": self.prefill_only_steps,
+            "tokens": self.tokens,
+            "occupancy": round(self.occupancy, 3),
+            "mixed_fraction": round(self.mixed_fraction, 3),
+        }
 
 
 def executable_decode_supported(cfg: ModelConfig) -> Optional[str]:
@@ -79,6 +130,12 @@ def _ffn_in_width(cfg: ModelConfig) -> int:
     return 2 * cfg.d_ff if cfg.activation in ("silu", "gelu") else cfg.d_ff
 
 
+def pad_prefill_rows(rows: int) -> int:
+    """Rows of the prefill-chunk FFN operand: the raw row count up to one
+    128-lane tile, the next 128 multiple beyond (zero-padded)."""
+    return rows if rows <= 128 else -(-rows // 128) * 128
+
+
 def _mlp_from_h(cfg: ModelConfig, h, w_out):
     """layers.mlp, minus the in-projection the executor already ran."""
     act = cfg.activation
@@ -99,11 +156,15 @@ class ServeEngine:
     def __init__(self, cfg: ModelConfig, params, *, batch: int = 8,
                  max_len: int = 512, rng_seed: int = 0,
                  plan_fusion: bool = False, measure=None,
-                 schedule_cache=None):
+                 schedule_cache=None, scheduling: str = "continuous"):
+        if scheduling not in ("continuous", "wavefront"):
+            raise ValueError(f"scheduling {scheduling!r} "
+                             "(continuous or wavefront)")
         self.cfg = cfg
         self.params = params
         self.batch = batch
         self.max_len = max_len
+        self.scheduling = scheduling
         self.rng = jax.random.PRNGKey(rng_seed)
         self._measure = measure
         self._schedule_cache = schedule_cache
@@ -114,6 +175,17 @@ class ServeEngine:
 
         self.executed = False
         self._mixed_steps: dict[int, object] = {}   # prompt len -> jitted step
+        #                                             (wavefront co-prefill)
+        self._cb_steps: dict[int, object] = {}      # prefill len -> jitted step
+        #                                             (continuous, executed)
+        self._cb_mixed_fused: dict[int, bool] = {}  # prefill len -> program
+        #                                             fused prefill⊕decode-attn
+        self.cb_program_info: dict[int, dict] = {}  # prefill len -> launch
+        #                                             table (the supported
+        #                                             reporting accessor)
+        self._cb_decode = None                      # generic vmapped fallback
+        self._refill_write = None
+        self.stats = ServeStats(batch=batch)
         self.fusion_plan = None
         if plan_fusion:
             reason = executable_decode_supported(cfg)
@@ -121,7 +193,12 @@ class ServeEngine:
                 # the executed decode program indexes the cache by the
                 # planned (128-aligned) length — size the cache to match
                 self.max_len = self._aligned_len()
-                self._decode = jax.jit(self._make_decode_step(prefill_len=0))
+                if scheduling == "wavefront":
+                    # the continuous path builds its own per-P steps
+                    # (_cb_step) lazily; only wavefront decodes through
+                    # this program
+                    self._decode = jax.jit(
+                        self._make_decode_step(prefill_len=0))
                 self.executed = True
             else:
                 print(f"[plan-fusion] decode step stays hand-wired: {reason}")
@@ -135,9 +212,10 @@ class ServeEngine:
     def decode_graph(self, *, prefill_rows: int = 2048,
                      dynamic_length: bool = True):
         """The serving step as a planner graph, with stable operand
-        signatures (core/binding.py): decode-wave RMSNorm -> decode
-        attention -> post-attention RMSNorm -> the router/FFN in-projection,
-        plus a prefill-chunk FFN matmul — the compute-bound partner of the
+        signatures (core/binding.py): decode-slot RMSNorm -> decode
+        attention (per-slot valid prefixes in a (B, 1) int32 operand) ->
+        post-attention RMSNorm -> the router/FFN in-projection, plus a
+        prefill-chunk FFN matmul — the compute-bound partner of the
         chunked-prefill⊕decode overlap mode.  ``prefill_rows=0`` drops the
         prefill partner (a pure decode step: a dependency chain the planner
         correctly leaves unfused).
@@ -163,7 +241,7 @@ class ServeEngine:
         ck = next(c for c in range(min(1024, S), 0, -128) if S % c == 0)
         att = decode_attention_op(B=B, S=S, H=H, Hkv=Hkv, D=D, dtype=dt,
                                   ck=ck, dynamic_length=dynamic_length)
-        # decode-wave projection: MoE router when the model routes, else the
+        # decode-slot projection: MoE router when the model routes, else the
         # FFN in-projection — weight streaming dominates at serving batch
         # (memory-bound; the honest fig_framework finding), so the planner
         # pairs it with the prefill chunk's genuinely compute-bound matmul.
@@ -194,7 +272,7 @@ class ServeEngine:
                            measure=None, cache=None):
         """Register the serving step's ops as a planner graph (ROADMAP) and
         plan the bundles; ``build_decode_program`` lowers the result onto
-        the live wave state.  With ``measure`` the schedule is profiled, and
+        the live slot state.  With ``measure`` the schedule is profiled, and
         ``cache`` makes every later engine start skip the search entirely.
         """
         from repro.core import planner
@@ -204,15 +282,18 @@ class ServeEngine:
                             cache=cache)
 
     # ------------------------------------------------------------------
-    # Executed decode step: plan -> program -> live wave state
+    # Executed decode step: plan -> program -> live slot state
     # ------------------------------------------------------------------
     def build_decode_program(self, *, prefill_rows: int = 0,
                              interpret: Optional[bool] = None):
         """Compile the planned decode step into an executor Program bound to
-        the live wave state.  The binding setters carry the model glue: the
-        norm's output slot projects QKV, applies RoPE and writes the cache;
-        the attention output slot applies W_o and the residual; the
-        projection output slot finishes the MLP and the second residual.
+        the live slot state.  The binding setters carry the model glue: the
+        norm's output slot projects QKV, applies RoPE at each slot's own
+        position and scatters k/v into each slot's cache row; the attention
+        output slot applies W_o and the residual; the projection output slot
+        finishes the MLP and the second residual.  The state's ``pos`` key
+        is the per-slot position vector ``(B,)`` — the wavefront path
+        broadcasts its scalar wave position into it (see ``_wave_state``).
         """
         from repro.core import executor, planner
         from repro.core.binding import BindingRegistry, Slot
@@ -238,15 +319,14 @@ class ServeEngine:
         def norm1_put(state, y):
             x1 = y[:, None, :].astype(dt)                       # (B, 1, d)
             q, k, v = layers.qkv_project(cfg, {"w_qkv": state["w_qkv"]}, x1)
-            positions = jnp.full((B, 1), state["pos"], jnp.int32)
+            positions = state["pos"].reshape(B, 1)              # per-slot
             q = layers.rope(q, positions, cfg.rope_theta, cfg.rope_fraction)
             k = layers.rope(k, positions, cfg.rope_theta, cfg.rope_fraction)
             state = dict(state)
             state["q"] = q[:, 0]
-            state["k_cache"] = jax.lax.dynamic_update_slice(
-                state["k_cache"], k, (0, state["pos"], 0, 0))
-            state["v_cache"] = jax.lax.dynamic_update_slice(
-                state["v_cache"], v, (0, state["pos"], 0, 0))
+            rows = jnp.arange(B)
+            state["k_cache"] = state["k_cache"].at[rows, state["pos"]].set(k[:, 0])
+            state["v_cache"] = state["v_cache"].at[rows, state["pos"]].set(v[:, 0])
             return state
 
         def att_put(state, o):
@@ -268,7 +348,7 @@ class ServeEngine:
                         if g.op.name.startswith("decode_attn"))
         reg.bind(att_name, q="q", k="k_cache", v="v_cache",
                  inputs={"len": Slot(get=lambda s: (s["pos"] + 1)
-                                     .reshape(1, 1).astype(jnp.int32))},
+                                     .reshape(B, 1).astype(jnp.int32))},
                  outputs={"o": Slot(put=att_put), "m": "attn_m",
                           "l": "attn_l"})
         reg.bind("decode_norm2", x="h_mid", scale="norm2_scale",
@@ -280,11 +360,13 @@ class ServeEngine:
             reg.bind("prefill_ffn", x="pf_h2", w="w_in", outputs={"out": "pf_ffn"})
         return executor.compile_plan(plan, bindings=reg, interpret=interpret)
 
-    def _wave_state(self, params, cache, x):
+    def _slot_state(self, params, cache, x, pos):
+        """State pytree for the executed program; ``pos`` is the per-slot
+        position vector (B,)."""
         run = lm.layer_runs(self.cfg)[0]
         p = params[run.name]
         return {
-            "x": x, "pos": cache["pos"],
+            "x": x, "pos": pos,
             "norm1_scale": p["norm1"]["scale"].reshape(1, -1),
             "norm2_scale": p["norm2"]["scale"].reshape(1, -1),
             "w_qkv": p["attn"]["w_qkv"], "w_o": p["attn"]["w_o"],
@@ -292,12 +374,46 @@ class ServeEngine:
             "k_cache": cache[run.name]["k"], "v_cache": cache[run.name]["v"],
         }
 
+    def _wave_state(self, params, cache, x):
+        """Wavefront form: the scalar wave position broadcasts into the
+        per-slot (B,) position vector the program contract expects."""
+        pos = jnp.full((self.batch,), cache["pos"], jnp.int32)
+        return self._slot_state(params, cache, x, pos)
+
+    def _coprefill_to_ffn_in(self, params, pf_tokens, P: int, pf_rows: int):
+        """Run a riding prompt's prefill up to the FFN in-projection input
+        — the part that precedes the fused launch.  pf_tokens: (Bp, P).
+        Returns (pf_h2 (pf_rows, d) zero-padded, xm post-attention hidden
+        (Bp, P, d), kp, vp (Bp, P, Hkv, D))."""
+        from repro.models import layers
+
+        cfg = self.cfg
+        run = lm.layer_runs(cfg)[0]
+        p = params[run.name]
+        xp, _ = lm._embed_inputs(cfg, params, {"tokens": pf_tokens})
+        Bp = xp.shape[0]
+        hp = layers.apply_norm(cfg, p["norm1"], xp)
+        qp, kp, vp = layers.qkv_project(cfg, p["attn"], hp)
+        positions = jnp.arange(P)[None, :]
+        qp = layers.rope(qp, positions, cfg.rope_theta, cfg.rope_fraction)
+        kp = layers.rope(kp, positions, cfg.rope_theta, cfg.rope_fraction)
+        op_ = layers.blockwise_attention(qp, kp, vp, causal=True)
+        xm = xp + op_.reshape(Bp, P, -1) @ p["attn"]["w_o"]
+        h2p = layers.apply_norm(cfg, p["norm2"], xm)
+        rows = Bp * P
+        pf_x = h2p.reshape(rows, cfg.d_model)
+        if pf_rows != rows:
+            pf_x = jnp.concatenate(
+                [pf_x, jnp.zeros((pf_rows - rows, cfg.d_model), pf_x.dtype)])
+        return pf_x.astype(jnp.dtype(cfg.dtype)), xm, kp, vp
+
     def _make_decode_step(self, prefill_len: int):
-        """The jitted executed decode step.  ``prefill_len > 0`` is the
-        mixed form: the pending wave's (B, prefill_len) prompt rides along —
-        its FFN in-projection joins the fused launch, the rest of its
-        prefill completes here, and the returned (cache, logits) seed that
-        wave's decode without ever calling ``lm.prefill``."""
+        """The jitted executed decode step (wavefront scheduling).
+        ``prefill_len > 0`` is the mixed form: the pending wave's
+        (B, prefill_len) prompt rides along — its FFN in-projection joins
+        the fused launch, the rest of its prefill completes here, and the
+        returned (cache, logits) seed that wave's decode without ever
+        calling ``lm.prefill``."""
         from repro.models import layers
 
         cfg = self.cfg
@@ -306,7 +422,7 @@ class ServeEngine:
         S = self._aligned_len()
         P = prefill_len
         rows = B * P
-        pf_rows = rows if rows <= 128 else -(-rows // 128) * 128
+        pf_rows = pad_prefill_rows(rows)
         program = self.build_decode_program(prefill_rows=pf_rows if P else 0)
 
         def step(params, cache, tokens, pf_tokens=None):
@@ -316,22 +432,8 @@ class ServeEngine:
 
             if P:
                 # pending wave's prefill, up to the FFN in-projection
-                xp, _ = lm._embed_inputs(cfg, params, {"tokens": pf_tokens})
-                hp = layers.apply_norm(cfg, p["norm1"], xp)
-                qp, kp, vp = layers.qkv_project(cfg, p["attn"], hp)
-                positions = jnp.arange(P)[None, :]
-                qp = layers.rope(qp, positions, cfg.rope_theta,
-                                 cfg.rope_fraction)
-                kp = layers.rope(kp, positions, cfg.rope_theta,
-                                 cfg.rope_fraction)
-                op_ = layers.blockwise_attention(qp, kp, vp, causal=True)
-                xm = xp + op_.reshape(B, P, -1) @ p["attn"]["w_o"]
-                h2p = layers.apply_norm(cfg, p["norm2"], xm)
-                pf_x = h2p.reshape(rows, d)
-                if pf_rows != rows:
-                    pf_x = jnp.concatenate(
-                        [pf_x, jnp.zeros((pf_rows - rows, d), pf_x.dtype)])
-                state["pf_h2"] = pf_x.astype(jnp.dtype(cfg.dtype))
+                state["pf_h2"], xm, kp, vp = self._coprefill_to_ffn_in(
+                    params, pf_tokens, P, pf_rows)
 
             state = program(state)
 
@@ -369,6 +471,158 @@ class ServeEngine:
         return self._mixed_steps[prefill_len]
 
     # ------------------------------------------------------------------
+    # Continuous batching: per-slot cache positions, admit/refill per token
+    # ------------------------------------------------------------------
+    def _init_slot_cache(self):
+        """The slot cache: ``lm.init_cache`` with the scalar wave position
+        replaced by the per-slot position vector (B,)."""
+        cache = lm.init_cache(self.cfg, self.batch, self.max_len)
+        cache["pos"] = jnp.zeros((self.batch,), jnp.int32)
+        return cache
+
+    def _slot_axes(self):
+        """vmap axes pytree for the slot cache: batch lives on axis 0 of
+        plain run leaves and axis 1 of scan-stacked (layer-major) leaves."""
+        axes = {"pos": 0}
+        for run in lm.layer_runs(self.cfg):
+            leaves = lm._cache_leaf_shapes(self.cfg, run, 1, self.max_len)
+            axes[run.name] = {name: (1 if run.count > 1 else 0)
+                              for name in leaves}
+        return axes
+
+    def _cb_plain_decode(self):
+        """Generic continuous decode: ``lm.decode_step`` vmapped over slots,
+        each at its own cache position — works for EVERY config (stacked
+        runs, MoE, recurrent caches), not just the executable shape."""
+        if self._cb_decode is None:
+            cfg = self.cfg
+            runs = lm.layer_runs(cfg)
+            axes = self._slot_axes()
+
+            def one(params, cache_b, tok):
+                # vmap stripped the slot axis — restore the B=1 batch dim
+                # lm.decode_step expects (pos stays a per-slot scalar)
+                full = {"pos": cache_b["pos"]}
+                for run in runs:
+                    ax = 1 if run.count > 1 else 0
+                    full[run.name] = {k: jnp.expand_dims(v, ax)
+                                      for k, v in cache_b[run.name].items()}
+                logits, newc = lm.decode_step(cfg, params, full, tok[None])
+                out = {"pos": newc["pos"]}
+                for run in runs:
+                    ax = 1 if run.count > 1 else 0
+                    out[run.name] = {k: jnp.squeeze(v, ax)
+                                     for k, v in newc[run.name].items()}
+                return logits[0], out
+
+            def step(params, cache, tokens, active):
+                logits, newc = jax.vmap(
+                    one, in_axes=(None, axes, 0),
+                    out_axes=(0, axes))(params, cache, tokens)
+                # inactive slots hold their position (their writes land one
+                # past their retired prefix — masked, and overwritten by the
+                # next refill before they could ever become visible)
+                newc["pos"] = jnp.where(active, newc["pos"], cache["pos"])
+                return logits, newc
+
+            self._cb_decode = jax.jit(step)
+        return self._cb_decode
+
+    def _cb_refill(self, cache, slot, prompt):
+        """Admit one prompt into a free slot: prefill (1, P), write the
+        cache leaves into the slot's rows, set its position to P.  Returns
+        (cache, last-token logits (V,))."""
+        toks = jnp.asarray(np.asarray(prompt, np.int32)[None])
+        c1, logits = self._prefill(self.params, {"tokens": toks})
+        if self._refill_write is None:
+            runs = lm.layer_runs(self.cfg)
+
+            def write(cache, c1, slot):
+                new = {"pos": cache["pos"].at[slot]
+                       .set(c1["pos"].astype(jnp.int32))}
+                for run in runs:
+                    if run.count > 1:
+                        new[run.name] = {
+                            k: cache[run.name][k].at[:, slot]
+                            .set(c1[run.name][k][:, 0])
+                            for k in cache[run.name]}
+                    else:
+                        new[run.name] = {
+                            k: cache[run.name][k].at[slot]
+                            .set(c1[run.name][k][0])
+                            for k in cache[run.name]}
+                return new
+
+            self._refill_write = jax.jit(write)
+        return self._refill_write(cache, c1, jnp.asarray(slot)), logits[0]
+
+    def _make_cb_step(self, prefill_len: int):
+        """The jitted executed continuous step: decode every slot at its own
+        cache position; with ``prefill_len > 0`` one waiting request's
+        (1, P) prompt rides along — its FFN in-projection joins the fused
+        launch (the steady mixed prefill⊕decode bundle) and the finished
+        prefill lands directly in the refill slot's cache rows."""
+        from repro.models import layers
+
+        cfg = self.cfg
+        B, d = self.batch, cfg.d_model
+        run = lm.layer_runs(cfg)[0]
+        P = prefill_len
+        pf_rows = pad_prefill_rows(P)
+        program = self.build_decode_program(prefill_rows=pf_rows if P else 0)
+        self._cb_mixed_fused[P] = any(
+            "prefill_ffn" in ms
+            and any(m.startswith("decode_attn") for m in ms)
+            for ms in program.fused_members)
+        self.cb_program_info[P] = {
+            "fused_launches": program.n_fused,
+            "total_launches": len(program.steps),
+            "steps": program.describe(),
+        }
+
+        def step(params, cache, tokens, active, slot=None, pf_tokens=None):
+            p = params[run.name]
+            x = layers.embed_onehot(params["embed"], tokens[:, None], d)
+            state = self._slot_state(params, cache, x[:, 0], cache["pos"])
+
+            if P:
+                # waiting request's (1, P) prefill, up to the FFN in-proj
+                state["pf_h2"], xm, kp, vp = self._coprefill_to_ffn_in(
+                    params, pf_tokens, P, pf_rows)
+
+            state = program(state)
+
+            xf = layers.apply_norm(cfg, params["final_norm"],
+                                   state["x_out"][:, None, :].astype(x.dtype))
+            logits = lm._head(cfg, params, xf)[:, 0]
+            new_pos = jnp.where(active, cache["pos"] + 1, cache["pos"])
+            kc, vc = state["k_cache"], state["v_cache"]
+            if not P:
+                return logits, {"pos": new_pos,
+                                run.name: {"k": kc, "v": vc}}
+
+            # finish the refill's MLP + residual, land its cache rows
+            ff = _mlp_from_h(cfg, state["pf_ffn"][:P]
+                             .astype(jnp.dtype(cfg.dtype)).reshape(1, P, -1),
+                             p["mlp"]["w_out"])
+            xop = xm + ff
+            kc = jax.lax.dynamic_update_slice(kc, kp, (slot, 0, 0, 0))
+            vc = jax.lax.dynamic_update_slice(vc, vp, (slot, 0, 0, 0))
+            new_pos = new_pos.at[slot].set(P)
+            xfp = layers.apply_norm(cfg, params["final_norm"], xop[:, -1:])
+            pf_logits = lm._head(cfg, params, xfp)[0, 0]
+            return (logits, {"pos": new_pos, run.name: {"k": kc, "v": vc}},
+                    pf_logits)
+
+        return step
+
+    def _cb_step(self, prefill_len: int):
+        if prefill_len not in self._cb_steps:
+            self._cb_steps[prefill_len] = jax.jit(
+                self._make_cb_step(prefill_len))
+        return self._cb_steps[prefill_len]
+
+    # ------------------------------------------------------------------
     def _wave_tokens(self, wave: list[Request]) -> np.ndarray:
         S = len(wave[0].prompt)
         toks = np.zeros((self.batch, S), np.int32)
@@ -392,6 +646,166 @@ class ServeEngine:
 
     # ------------------------------------------------------------------
     def run(self, requests: list[Request]) -> list[Request]:
+        if self.scheduling == "continuous":
+            return self._run_continuous(requests)
+        return self._run_wavefront(requests)
+
+    # ------------------------------------------------------------------
+    def _retire_reason(self, req: Request, tok: int, n_out: int, pos: int, *,
+                       check_eos: bool = True) -> Optional[str]:
+        """Retirement rule over explicit (n_out, pos) so the same-step
+        refill predictor evaluates it on post-step values — prediction and
+        reality cannot desync."""
+        if check_eos and req.eos_token is not None and tok == req.eos_token:
+            return "eos"
+        if n_out >= req.max_new_tokens:
+            return "max_new"
+        if pos >= self.max_len:
+            return "max_len"                 # cache full: truncate
+        return None
+
+    def _will_retire_this_step(self, req: Request, pos_now: int) -> bool:
+        """Deterministic retirement predictor: a decode step always lands
+        one token and advances the position by one; EOS is data-dependent
+        and deliberately excluded."""
+        return self._retire_reason(req, -1, len(req.out_tokens) + 1,
+                                   pos_now + 1, check_eos=False) is not None
+
+    def _admit(self, req: Request, slot: int, pf_logits, slots, pos_h, last):
+        """First token from the prompt's last-position logits; the slot goes
+        active unless the request already retires (budget 1 / cache full).
+        EOS is deliberately NOT checked here: the wavefront oracle only
+        honours EOS on decode-loop tokens, never on the prefill-sampled
+        first token, and the differential harness pins that behaviour."""
+        stats = self.stats
+        tok = self._sample(np.asarray(pf_logits, np.float32), req)
+        req.out_tokens.append(tok)
+        stats.tokens += 1
+        stats.admissions.append((stats.steps - 1, req.rid, slot))
+        pos_h[slot] = len(req.prompt)
+        reason = self._retire_reason(req, tok, len(req.out_tokens),
+                                     pos_h[slot], check_eos=False)
+        if reason:
+            req.done = True
+            stats.retirements.append((stats.steps - 1, req.rid, reason))
+        else:
+            assert slots[slot] is None, \
+                f"slot {slot} refilled while request {slots[slot].rid} lives"
+            slots[slot] = req
+            last[slot] = tok
+
+    def _run_continuous(self, requests: list[Request]) -> list[Request]:
+        """Iteration-level continuous batching: every step decodes all
+        active slots at their own cache positions, retires finished slots,
+        and refills EVERY free slot from the arrival queue — lowest free
+        slot first, arrival order first (deterministic refill given a fixed
+        arrival queue).  On the executed path the first refill's prompt
+        co-prefills inside the decode step's fused launch; further refills
+        (and all refills on the fallback path) prefill alongside in the
+        same iteration."""
+        B = self.batch
+        for r in requests:
+            if len(r.prompt) > self.max_len:
+                raise ValueError(
+                    f"request {r.rid}: prompt length {len(r.prompt)} exceeds "
+                    f"max_seq_len {self.max_len} — continuous batching "
+                    f"cannot admit it (raise max_len or truncate the prompt)")
+        self.stats = stats = ServeStats(batch=B)
+        # FIFO by arrival step, submission order breaking ties
+        waiting = sorted(requests, key=lambda r: r.arrival)
+        slots: list[Optional[Request]] = [None] * B
+        pos_h = [0] * B                               # host mirror of pos
+        last = np.zeros(B, np.int32)
+        cache = self._init_slot_cache()
+
+        while waiting or any(s is not None for s in slots):
+            step_i = stats.steps
+            # a slot is refillable when empty OR when its request retires
+            # *deterministically* this very step (budget / cache-full): the
+            # retiring slot's last decode reads the cache before the
+            # refill's prefill rows land, so the new prompt co-prefills in
+            # the same iteration — no idle step between retire and refill
+            # (EOS retirements are not predictable; those slots refill one
+            # step later)
+            free = [i for i, s in enumerate(slots)
+                    if s is None or self._will_retire_this_step(s, pos_h[i])]
+            arrived = [r for r in waiting if r.arrival <= step_i]
+            refills = list(zip(free, arrived))
+            for _slot, r in refills:
+                waiting.remove(r)
+            active = np.array([s is not None for s in slots])
+            n_active = int(active.sum())
+
+            if n_active == 0:
+                stats.steps += 1
+                if not refills:
+                    continue                          # idle: future arrivals
+                stats.prefill_only_steps += 1
+                for slot, req in refills:
+                    cache, pf_logits = self._cb_refill(cache, slot,
+                                                       req.prompt)
+                    self._admit(req, slot, pf_logits, slots, pos_h, last)
+                continue
+
+            toks = jnp.asarray(last)
+            act = jnp.asarray(active)
+            riding = None                 # refill carried by the fused launch
+            if self.executed and refills:
+                riding, refills = refills[0], refills[1:]
+            if self.executed:
+                P = len(riding[1].prompt) if riding else 0
+                step_fn = self._cb_step(P)
+                if P:
+                    slot, req = riding
+                    pf_toks = jnp.asarray(
+                        np.asarray(req.prompt, np.int32)[None])
+                    logits, cache, ride_logits = step_fn(
+                        self.params, cache, toks, act,
+                        jnp.asarray(slot), pf_toks)
+                else:
+                    logits, cache = step_fn(self.params, cache, toks, act)
+            else:
+                logits, cache = self._cb_plain_decode()(
+                    self.params, cache, toks, act)
+            extra_logits = []
+            for slot, req in refills:     # side-by-side (unfused) refills
+                cache, pf_logits = self._cb_refill(cache, slot, req.prompt)
+                extra_logits.append(pf_logits)
+            stats.steps += 1
+            stats.decode_steps += 1
+            stats.slot_steps += n_active
+            if riding is not None or refills:
+                stats.mixed_steps += 1
+                if riding is not None and self._cb_mixed_fused.get(
+                        len(riding[1].prompt)):
+                    stats.fused_mixed_steps += 1
+
+            logits_np = np.asarray(logits, np.float32)
+            for b in range(B):
+                req = slots[b]
+                if req is None:
+                    continue
+                pos_h[b] += 1
+                tok = self._sample(logits_np[b], req)
+                req.out_tokens.append(tok)
+                stats.tokens += 1
+                last[b] = tok
+                reason = self._retire_reason(req, tok, len(req.out_tokens),
+                                             pos_h[b])
+                if reason:
+                    req.done = True
+                    slots[b] = None
+                    stats.retirements.append((stats.steps - 1, req.rid,
+                                              reason))
+            if riding is not None:
+                self._admit(riding[1], riding[0], ride_logits, slots, pos_h,
+                            last)
+            for (slot, req), pf_logits in zip(refills, extra_logits):
+                self._admit(req, slot, pf_logits, slots, pos_h, last)
+        return requests
+
+    # ------------------------------------------------------------------
+    def _run_wavefront(self, requests: list[Request]) -> list[Request]:
         # group by prompt length: one wave = one (length, <=batch) group
         by_len: dict[int, list[Request]] = {}
         for r in requests:

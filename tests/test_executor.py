@@ -236,7 +236,8 @@ def serve_setup():
     from repro.serve.engine import ServeEngine
     cfg = _cfg()
     params = lm.init(cfg, jax.random.PRNGKey(0))
-    eng = ServeEngine(cfg, params, batch=2, max_len=40, plan_fusion=True)
+    eng = ServeEngine(cfg, params, batch=2, max_len=40, plan_fusion=True,
+                      scheduling="wavefront")
     return cfg, params, eng
 
 
@@ -266,9 +267,11 @@ def test_executed_decode_step_matches_lm_decode(serve_setup):
 
 
 def test_executed_engine_tokens_match_handwired(serve_setup):
-    """Whole-engine parity across multiple waves: the executed decode (and
-    the chunked co-prefill of the pending wave, fused with decode
-    attention) produces the same tokens as the hand-wired engine."""
+    """Whole-engine parity across multiple waves (legacy wavefront
+    scheduling): the executed decode (and the chunked co-prefill of the
+    pending wave, fused with decode attention) produces the same tokens as
+    the hand-wired engine.  Continuous-batching parity lives in
+    tests/test_serve_continuous.py."""
     from repro.serve.engine import Request, ServeEngine
     cfg, params, eng = serve_setup
     prompts = [np.arange(1, 9, dtype=np.int32),
@@ -279,7 +282,8 @@ def test_executed_engine_tokens_match_handwired(serve_setup):
               for i, p in enumerate(prompts)]
     reqs_e = [Request(rid=i, prompt=p, max_new_tokens=4)
               for i, p in enumerate(prompts)]
-    ServeEngine(cfg, params, batch=2, max_len=40).run(reqs_h)
+    ServeEngine(cfg, params, batch=2, max_len=40,
+                scheduling="wavefront").run(reqs_h)
     eng.run(reqs_e)
     assert [r.out_tokens for r in reqs_e] == [r.out_tokens for r in reqs_h]
     # two prompt lengths -> the mixed (co-prefill) step really compiled

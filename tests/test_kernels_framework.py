@@ -75,6 +75,26 @@ def test_decode_attention_op(B, S, H, Hkv, D, ck, rng):
                                atol=3e-5)
 
 
+def test_decode_attention_per_slot_lengths(rng):
+    """dynamic_length: the (B, 1) int32 operand masks each slot at its OWN
+    valid prefix — row b of the vectorized kernel equals a scalar-length
+    reference run at length[b] (the continuous-batching cache contract;
+    the hypothesis sweep lives in test_decode_attention_vec.py)."""
+    B, S, H, Hkv, D, ck = 3, 256, 4, 2, 32, 64
+    op = decode_attention_op(B=B, S=S, H=H, Hkv=Hkv, D=D,
+                             dtype=jnp.float32, ck=ck, dynamic_length=True)
+    q = jax.random.normal(rng, (B, H, D), jnp.float32)
+    k = jax.random.normal(jax.random.PRNGKey(5), (B, S, Hkv, D), jnp.float32)
+    v = jax.random.normal(jax.random.PRNGKey(6), (B, S, Hkv, D), jnp.float32)
+    lens = jnp.asarray([[1], [100], [256]], jnp.int32)
+    o, _m, _l = hfuse.run_single(op, interpret=True)(lens, q, k, v)
+    for b, L in enumerate([1, 100, 256]):
+        want = ref.decode_attention(q[b:b + 1], k[b:b + 1, :L],
+                                    v[b:b + 1, :L], L)
+        np.testing.assert_allclose(np.asarray(o[b]), np.asarray(want)[0],
+                                   atol=3e-5)
+
+
 @pytest.mark.parametrize("E,C,d,f,act", [(4, 256, 64, 32, "silu"),
                                          (8, 128, 128, 64, "gelu")])
 def test_moe_gmm(E, C, d, f, act, rng):
