@@ -15,12 +15,15 @@ live operands:
                  in-projection) -> norm -> FFN projection over a live KV
                  cache.
   serve_continuous — the continuous-batching engine under a staggered
-                 Poisson-ish arrival trace: tokens/sec, slot occupancy and
-                 the fraction of decode steps carrying a fused mixed
+                 Poisson-ish arrival trace with a small PrefillBudget, so
+                 prompts span 1-3 chunks: tokens/sec, slot occupancy, the
+                 fraction of decode steps carrying a fused mixed
                  prefill⊕decode bundle (must be >= 80%: the steady mixed
-                 graph, not wave-boundary-only), token-for-token verified
-                 against the legacy wavefront engine, with a zero-new-
-                 searches replan over the shared schedule cache.
+                 graph, not wave-boundary-only), the fused-prefill fraction
+                 and mean admission latency of the chunked admissions,
+                 token-for-token verified against the legacy wavefront
+                 engine, with a zero-new-searches replan over the shared
+                 schedule cache.
 
 Each program is verified against the hand-wired reference (jnp oracles /
 ``run_single`` chains / the wavefront differential oracle) and the
@@ -164,7 +167,7 @@ def _serve_decode_row(interpret: bool) -> dict:
     err_pf = float(np.max(np.abs(np.asarray(pf_logits)
                                  - np.asarray(ref_logits))))
 
-    prog = eng.build_decode_program(prefill_rows=128)
+    prog = eng.build_decode_program(ffn_rows=128)
     native = jax.jit(lambda p, c, t: lm.decode_step(cfg, p, c, t))
     return {
         "program": "serve_decode_mixed",
@@ -193,16 +196,21 @@ def _serve_continuous_row(interpret: bool) -> dict:
     from repro.core import autotuner
     from repro.core.schedule_cache import ScheduleCache
     from repro.models import lm
-    from repro.serve.engine import Request, ServeEngine
+    from repro.serve.engine import PrefillBudget, Request, ServeEngine
 
     cfg = dataclasses.replace(get_config("granite-3-2b").reduced(),
                               dtype="float32")
     params = lm.init(cfg, jax.random.PRNGKey(0))
+    # small chunk budget so prompts span 1-3 chunks and two prefilling
+    # slots' chunks co-reside with decode attention in one fused launch
+    budget = PrefillBudget(chunk_rows=8, max_coresident_chunks=2)
 
     def make_requests():
         # staggered lengths + short decorrelated budgets + Poisson-ish
         # arrivals: slots retire every 1-2 steps, so nearly every decode
-        # iteration carries a refill's prefill chunk (the steady mixed graph)
+        # iteration carries a prefill chunk (the steady mixed graph);
+        # every third prompt exceeds the chunk budget and is admitted
+        # across multiple iterations
         rng = np.random.default_rng(7)
         arrive = 0.0
         reqs = []
@@ -211,7 +219,7 @@ def _serve_continuous_row(interpret: bool) -> dict:
             reqs.append(Request(
                 rid=i,
                 prompt=rng.integers(1, cfg.vocab_size,
-                                    (8, 12)[i % 2]).astype(np.int32),
+                                    (8, 12, 20)[i % 3]).astype(np.int32),
                 max_new_tokens=int(rng.integers(2, 4)),
                 arrival=int(arrive)))
         return reqs
@@ -219,7 +227,8 @@ def _serve_continuous_row(interpret: bool) -> dict:
     with tempfile.TemporaryDirectory() as td:
         sched = ScheduleCache(Path(td) / "sched.json")
         eng = ServeEngine(cfg, params, batch=3, max_len=64, plan_fusion=True,
-                          scheduling="continuous", schedule_cache=sched)
+                          scheduling="continuous", schedule_cache=sched,
+                          prefill_budget=budget)
         assert eng.executed, "reduced granite must support the executed decode"
         reqs = make_requests()
         t0 = _time.perf_counter()
@@ -238,7 +247,7 @@ def _serve_continuous_row(interpret: bool) -> dict:
         n = autotuner.SEARCH_COUNT
         eng2 = ServeEngine(cfg, params, batch=3, max_len=64,
                            plan_fusion=True, scheduling="continuous",
-                           schedule_cache=sched)
+                           schedule_cache=sched, prefill_budget=budget)
         eng2.run(make_requests())
         new_searches = autotuner.SEARCH_COUNT - n
 
@@ -258,6 +267,9 @@ def _serve_continuous_row(interpret: bool) -> dict:
                                                            1),
         "fused_mixed_steps": st.fused_mixed_steps,
         "decode_steps": st.decode_steps,
+        "prefill_chunks": st.prefill_chunks,
+        "fused_prefill_fraction": st.fused_prefill_fraction,
+        "mean_admission_latency_steps": st.mean_admission_latency,
         "replan_new_searches": int(new_searches),
         "slot_trace": st.describe(),
     }
@@ -287,9 +299,15 @@ def run(backend: str = "interpret", out_path: str | None = None) -> dict:
         "prefill⊕decode bundle on >=80% of decode steps, got "
         f"{cont['fused_mixed_fraction']:.0%}")
     assert cont["replan_new_searches"] == 0, "replan re-searched a bundle"
+    # chunked admission really fused: prefill chunks rode the decode launch
+    assert cont["fused_prefill_fraction"] > 0.0, (
+        "no prefill chunk ever shared a fused launch with decode attention")
     print(f"# continuous: {cont['tokens_per_s']:.1f} tok/s, occupancy "
           f"{cont['slot_occupancy']:.0%}, fused mixed bundle on "
-          f"{cont['fused_mixed_fraction']:.0%} of decode steps")
+          f"{cont['fused_mixed_fraction']:.0%} of decode steps, "
+          f"{cont['fused_prefill_fraction']:.0%} of "
+          f"{cont['prefill_chunks']} prefill chunks fused, admission "
+          f"latency {cont['mean_admission_latency_steps']:.1f} steps")
     report = {"backend": backend, "git_sha": git_sha(), "rows": rows}
     out = Path(out_path or f"BENCH_executed_{backend}_{report['git_sha']}.json")
     out.write_text(json.dumps(report, indent=1))

@@ -75,23 +75,6 @@ class SearchResult:
     cache_hit: bool = False
     cache_key: Optional[str] = None   # set whenever a cache was consulted
 
-    # deprecated 2-op compatibility accessors (everything is N-way now)
-    @property
-    def a(self) -> OpSpec:
-        import warnings
-        warnings.warn("SearchResult.a/.b are deprecated — bundles are "
-                      "N-way; use SearchResult.ops",
-                      DeprecationWarning, stacklevel=2)
-        return self.ops[0]
-
-    @property
-    def b(self) -> OpSpec:
-        import warnings
-        warnings.warn("SearchResult.a/.b are deprecated — bundles are "
-                      "N-way; use SearchResult.ops",
-                      DeprecationWarning, stacklevel=2)
-        return self.ops[1]
-
     def build(self, *, interpret: bool = False):
         return hfuse.generate(self.ops, self.best.sched, interpret=interpret,
                               vmem_limit=self.best.vmem_cap)

@@ -18,9 +18,11 @@ jit-compatible ``state -> state`` function in which
 Ordering: bundles are contracted to super-nodes (the planner only fuses
 mutually independent ops, so a bundle is internally unordered) and the
 contracted DAG is topologically sorted.  A dependency cycle *between*
-bundles — possible in principle when two bundles each contain an op that
-feeds the other — is a planning bug surfaced as an error here, not silently
-misexecuted.
+bundles — two bundles each containing an op that feeds the other — can no
+longer be planned: ``planner._contracted_acyclic`` rejects any candidate
+grouping that would contract into a cycle.  The toposort here stays the
+backstop for hand-built plans, surfacing the cycle as an error instead of
+silently misexecuting.
 """
 from __future__ import annotations
 

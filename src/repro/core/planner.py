@@ -22,7 +22,6 @@ N-way *bundles*:
 from __future__ import annotations
 
 import contextlib
-import warnings
 from dataclasses import dataclass
 from typing import Callable, Optional, Sequence
 
@@ -44,21 +43,6 @@ class FusionDecision:
     result: autotuner.SearchResult
     predicted_speedup_pct: float
     measured_speedup_pct: Optional[float] = None   # set when plan(measure=)
-
-    # deprecated 2-op compatibility accessors (everything is N-way now)
-    @property
-    def a(self) -> str:
-        warnings.warn("FusionDecision.a/.b are deprecated — bundles are "
-                      "N-way; use FusionDecision.members",
-                      DeprecationWarning, stacklevel=2)
-        return self.members[0]
-
-    @property
-    def b(self) -> str:
-        warnings.warn("FusionDecision.a/.b are deprecated — bundles are "
-                      "N-way; use FusionDecision.members",
-                      DeprecationWarning, stacklevel=2)
-        return self.members[1]
 
 
 @dataclass
@@ -116,6 +100,43 @@ def _independent_of_all(clo: dict[str, frozenset], bundle: Sequence[OpSpec],
                         cand: OpSpec) -> bool:
     return all(cand.name not in clo[m.name] and m.name not in clo[cand.name]
                for m in bundle)
+
+
+def _contracted_acyclic(ops: dict[str, GraphOp],
+                        bundles: Sequence[Sequence[str]]) -> bool:
+    """True iff contracting each bundle to one super-node leaves the
+    dependency graph acyclic — the executability contract
+    ``executor._toposort`` enforces.  Pairwise independence of a bundle's
+    members is NOT enough: a path a -> x -> b through an outside op turns
+    the contracted {a, b} node into a cycle with x, and two bundles can
+    feed each other through disjoint member pairs.  The planner checks
+    every candidate grouping here so such bundles are never formed."""
+    gid: dict[str, int] = {}
+    for i, members in enumerate(bundles):
+        for name in members:
+            gid[name] = i
+    n = len(bundles)
+    for name in ops:
+        if name not in gid:
+            gid[name] = n
+            n += 1
+    edges: dict[int, set[int]] = {i: set() for i in range(n)}
+    indeg = [0] * n
+    for name, g in ops.items():
+        for d in g.deps:
+            if d in gid and gid[d] != gid[name] \
+                    and gid[name] not in edges[gid[d]]:
+                edges[gid[d]].add(gid[name])
+                indeg[gid[name]] += 1
+    ready = [i for i in range(n) if indeg[i] == 0]
+    seen = 0
+    while ready:
+        seen += 1
+        for w in edges[ready.pop()]:
+            indeg[w] -= 1
+            if indeg[w] == 0:
+                ready.append(w)
+    return seen == n
 
 
 def _bundle_search(bundle: Sequence[OpSpec],
@@ -196,18 +217,25 @@ def _plan_inner(graph, ops, memo, min_gain_pct, allow_same_bound, max_ways,
 
     used: set[str] = set()
     fused: list[FusionDecision] = []
+    accepted: list[tuple[str, ...]] = []     # member tuples, for the
+    #                                          contracted-cycle guard
     rejected: list[tuple[str, str, str]] = []
 
     for m in mem:
         if m.name in used:
             continue
-        # closest-native-time compute partner (paper: ratio ~1 is best)
+        # closest-native-time compute partner (paper: ratio ~1 is best);
+        # the candidate pair must also keep the *contracted* graph acyclic
         partners = [c for c in comp if c.name not in used
-                    and independent(ops, m.name, c.name, clo)]
+                    and independent(ops, m.name, c.name, clo)
+                    and _contracted_acyclic(ops,
+                                            accepted + [(m.name, c.name)])]
         if not partners and allow_same_bound:
             partners = [c.op for c in graph
                         if c.op.name not in used and c.op.name != m.name
-                        and independent(ops, m.name, c.op.name, clo)]
+                        and independent(ops, m.name, c.op.name, clo)
+                        and _contracted_acyclic(
+                            ops, accepted + [(m.name, c.op.name)])]
         if not partners:
             continue
         c = min(partners, key=lambda o: abs(o.t_native - m.t_native))
@@ -217,10 +245,13 @@ def _plan_inner(graph, ops, memo, min_gain_pct, allow_same_bound, max_ways,
         # t_hfused(bundle ∪ {x}) must beat t_hfused(bundle) + native(x)
         t_now = _bundle_cost(bundle, memo, cache)
         while len(bundle) < max_ways:
+            names_now = tuple(b.name for b in bundle)
             pool = [g.op for g in graph
                     if g.op.name not in used
-                    and g.op.name not in {b.name for b in bundle}
-                    and _independent_of_all(clo, bundle, g.op)]
+                    and g.op.name not in names_now
+                    and _independent_of_all(clo, bundle, g.op)
+                    and _contracted_acyclic(
+                        ops, accepted + [names_now + (g.op.name,)])]
             if not pool:
                 break
             scored = [(t_now + native_time(x)
@@ -258,6 +289,7 @@ def _plan_inner(graph, ops, memo, min_gain_pct, allow_same_bound, max_ways,
         if accept_gain >= min_gain_pct:
             fused.append(FusionDecision(names, res, gain, measured_pct))
             used |= set(names)
+            accepted.append(names)
         else:
             kind = "measured" if use_measured else "predicted"
             rejected.append(("+".join(names[:-1]), names[-1],

@@ -1,0 +1,123 @@
+"""Chunked flash-attention prefill Pallas kernel: one prompt chunk of ONE
+slot attending that slot's KV cache.
+
+The serving engine admits prompts of any length by chipping them away one
+chunk per iteration (docs/serving.md §Chunked prefill): the chunk's C query
+rows land in the cache *before* the launch, then this kernel runs full
+causal attention of those rows against the slot's whole cache — the rows
+[0, off) it prefilled on earlier iterations plus the chunk itself.  At real
+scale the op is compute-bound (O(C) flops per cache byte streamed), which
+makes it the paper's canonical partner for the memory-bound decode
+attention that shares the launch: N of these chunks (different slots) ⊕ the
+vectorized decode kernel form ONE fused bundle (ServeEngine.decode_graph).
+
+Fusible form mirrors kernels/decode_attention.py: a 1-D grid over kv
+chunks, online-softmax (m, l) carries in small fp32 *outputs* with constant
+index maps (not scratch) so the op composes under core/hfuse.generate.  The
+chunk's start position arrives as a (1, 1) int32 operand ("off"), so one
+compiled kernel serves every chunk of every prompt.
+
+Causal chunk masking against the existing cache: query row r (absolute
+position off + r) admits cache position p iff p <= off + r.  That single
+predicate covers all three row classes: the already-prefilled prefix
+(p < off: always admitted), the chunk itself (causal within the chunk), and
+everything beyond (garbage rows the engine has not written yet: masked).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.op_spec import MIN_BLOCK_ROWS, OpSpec, Operand
+
+NEG_INF = -1e30
+
+
+def prefill_attention_op(C: int, S: int, H: int, Hkv: int, D: int,
+                         dtype=jnp.bfloat16, ck: int = 1024,
+                         name: str | None = None) -> OpSpec:
+    """q: (C,H,D) one chunk of one slot; cache k,v: (S,Hkv,D); off: (1,1)
+    int32 absolute start position of the chunk; out o: (C,H,D) fp32.
+
+    Grid: S // ck kv-chunk steps.  The engine scatters the chunk's own k/v
+    into rows [off, off+C) before the launch, so the kernel only ever reads
+    the cache — there is no in-kernel write ordering to get wrong, and the
+    same (S,Hkv,D) operand contract as decode attention lets the executor
+    bind both kernels to the same cache leaves in one fused launch.
+
+    Tuned variants rebuild through the ``shrink`` factory (smaller ``ck``,
+    proportionally larger grid) rather than ``op_spec.shrink_blocks`` — the
+    body closes over the kv-chunk count, so a structural block rewrite
+    would silently break the online-softmax recurrence.
+    """
+    assert S % ck == 0 and H % Hkv == 0
+    nk = S // ck
+    rep = H // Hkv
+    scale = 1.0 / math.sqrt(D)
+    resolved = name or f"prefill_attn_C{C}_S{S}_H{H}kv{Hkv}"
+
+    def body(step, off_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref):
+        j = step                                           # kv-chunk index
+
+        @pl.when(j == 0)
+        def _():
+            m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+            l_ref[...] = jnp.zeros_like(l_ref)
+            o_ref[...] = jnp.zeros_like(o_ref)
+
+        off = off_ref[0, 0]
+        q = q_ref[...].astype(jnp.float32) * scale         # (C, H, D)
+        k = k_ref[...].astype(jnp.float32)                 # (ck, Hkv, D)
+        v = v_ref[...].astype(jnp.float32)
+        qg = q.reshape(C, Hkv, rep, D)
+        s = jnp.einsum("chrd,khd->chrk", qg, k)            # (C, Hkv, rep, ck)
+        kpos = j * ck + jax.lax.broadcasted_iota(jnp.int32,
+                                                 (C, Hkv, rep, ck), 3)
+        qpos = off + jax.lax.broadcasted_iota(jnp.int32,
+                                              (C, Hkv, rep, ck), 0)
+        s = jnp.where(kpos <= qpos, s, NEG_INF)
+        sr = s.reshape(C, H, ck)
+        m_prev = m_ref[...]                                # (C, H, 1)
+        m_new = jnp.maximum(m_prev, sr.max(-1, keepdims=True))
+        p = jnp.exp(sr - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + p.sum(-1, keepdims=True)
+        pv = jnp.einsum("chrk,khd->chrd", p.reshape(C, Hkv, rep, ck), v)
+        o_ref[...] = o_ref[...] * alpha + pv.reshape(C, H, D)
+        m_ref[...] = m_new
+
+        @pl.when(j == nk - 1)
+        def _():
+            o_ref[...] = o_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+
+    def shrink(factor: int):
+        if ck % factor or ck // factor < MIN_BLOCK_ROWS:
+            return None
+        return prefill_attention_op(C, S, H, Hkv, D, dtype=dtype,
+                                    ck=ck // factor, name=resolved)
+
+    itemsize = jnp.dtype(dtype).itemsize
+    return OpSpec(
+        name=resolved, grid=nk, body=body,
+        inputs=(Operand((1, 1), jnp.int32, (1, 1), lambda s: (0, 0)),
+                Operand((C, H, D), dtype, (C, H, D), lambda s: (0, 0, 0)),
+                Operand((S, Hkv, D), dtype, (ck, Hkv, D),
+                        lambda s: (s, 0, 0)),
+                Operand((S, Hkv, D), dtype, (ck, Hkv, D),
+                        lambda s: (s, 0, 0))),
+        outputs=(Operand((C, H, D), jnp.float32, (C, H, D),
+                         lambda s: (0, 0, 0)),
+                 Operand((C, H, 1), jnp.float32, (C, H, 1),
+                         lambda s: (0, 0, 0)),
+                 Operand((C, H, 1), jnp.float32, (C, H, 1),
+                         lambda s: (0, 0, 0))),
+        flops=2.0 * C * H * S * D * 2,
+        hbm_bytes=2.0 * S * Hkv * D * itemsize
+        + C * H * D * (itemsize + 4.0) + 4.0 * C * H * 2,
+        shrink=shrink,
+        tag="framework:prefill_attention",
+        in_names=("off", "q", "k", "v"),
+        out_names=("o", "m", "l"))

@@ -20,7 +20,7 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.models import lm
-from repro.serve.engine import Request, ServeEngine
+from repro.serve.engine import PrefillBudget, Request, ServeEngine
 
 
 def build_requests(cfg, args) -> list[Request]:
@@ -67,6 +67,16 @@ def main(argv=None):
                     help="mean request arrivals per engine step (0 = all "
                          "requests queued at step 0); Poisson-ish trace "
                          "for the occupancy report")
+    ap.add_argument("--chunk-rows", type=int, default=2048,
+                    help="prefill budget: max prompt rows admitted per slot "
+                         "per iteration (PrefillBudget.chunk_rows); longer "
+                         "prompts are chipped away chunk-by-chunk")
+    ap.add_argument("--coresident-chunks", type=int, default=2,
+                    help="prefill budget: max prefill chunks (distinct "
+                         "slots) co-resident in one fused decode launch")
+    ap.add_argument("--reject-overlong", action="store_true",
+                    help="reject prompts longer than --chunk-rows instead "
+                         "of admitting them across iterations")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--plan-fusion", action="store_true",
                     help="plan the decode-step fusion bundle "
@@ -90,12 +100,16 @@ def main(argv=None):
         from repro.core.timing import make_measure
         measure = make_measure(args.measure) if args.measure else None
         schedule_cache = default_cache()
+    budget = PrefillBudget(chunk_rows=args.chunk_rows,
+                           max_coresident_chunks=args.coresident_chunks)
     engine = ServeEngine(cfg, params, batch=args.batch,
                          max_len=args.prompt_len + args.stagger
                          + args.max_new + 8,
                          plan_fusion=args.plan_fusion, measure=measure,
                          schedule_cache=schedule_cache,
-                         scheduling=args.scheduling)
+                         scheduling=args.scheduling,
+                         prefill_budget=budget,
+                         reject_overlong=args.reject_overlong)
     if engine.fusion_plan is not None:
         print("[plan-fusion] decode-step bundles:")
         for row in engine.fusion_plan.summary():
@@ -117,6 +131,10 @@ def main(argv=None):
         print(f"[slots] occupancy {st.occupancy:.0%}, mixed prefill⊕decode "
               f"on {st.mixed_fraction:.0%} of decode steps "
               f"({st.fused_mixed_steps} in a fused launch)")
+        print(f"[prefill] {st.prefill_chunks} chunks admitted, "
+              f"{st.fused_prefill_fraction:.0%} in a fused launch; "
+              f"mean admission latency "
+              f"{st.mean_admission_latency:.1f} steps")
     for r in reqs[:3]:
         print(f"  req {r.rid}: {r.out_tokens}")
 

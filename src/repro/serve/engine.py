@@ -22,15 +22,22 @@ as Pallas kernels routed by a binding registry over the live slot state
 model glue (QKV projection, per-slot RoPE, per-slot cache scatter,
 residuals, gating, head) living in the binding setters.  Decode attention
 reads each slot's valid prefix from a vectorized ``(B, 1)`` int32 operand,
-so one compiled kernel serves every mix of slot positions.  When a request
-is waiting, its prompt's FFN in-projection — the compute-bound partner the
-planner pairs with the memory-bound cache streaming — rides in the same
-fused launch, and the rest of that prompt's prefill completes in the same
-jitted step: chunked prefill⊕decode co-execution, the dual-stream mode
-with *used* outputs.  Configs outside the supported shape (multi-run
-stacks, MoE, non-RMSNorm) fall back to the hand-wired ``lm.decode_step``
-with a notice (``executable_decode_supported`` returns the reason; see
-docs/serving.md §Fallback).
+so one compiled kernel serves every mix of slot positions.
+
+Chunked prefill (``PrefillBudget``): on the executed continuous path a
+waiting prompt is admitted in chunks of ``chunk_rows`` tokens — the slot
+enters a *prefilling* phase, each iteration scatters one chunk's k/v into
+the slot's cache rows and runs the blockwise flash-prefill kernel
+(kernels/prefill_attention) for that chunk *inside the decode step's fused
+launch*.  Up to ``max_coresident_chunks`` chunks from different slots ride
+one launch: N compute-bound prefill-attention ops ⊕ the memory-bound
+vectorized decode attention, the paper's heterogeneous pairing as ONE
+Pallas call.  Prompts of any length (up to the cache) are chipped away
+across iterations; the first token samples from the final chunk's logits.
+Configs outside the supported shape (multi-run stacks, MoE, non-RMSNorm)
+fall back to the hand-wired ``lm.decode_step`` with a notice
+(``executable_decode_supported`` returns the reason; see docs/serving.md
+§Fallback).
 
 ``examples/dual_stream_decode.py`` shows the horizontal-fusion dual-stream
 variant of the decode step.
@@ -38,6 +45,7 @@ variant of the decode step.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from dataclasses import dataclass, field
 from typing import Optional
 
@@ -63,6 +71,41 @@ class Request:
     done: bool = False
 
 
+@dataclass(frozen=True)
+class PrefillBudget:
+    """One iteration's prefill allowance — the single knob that replaced
+    the ``prefill_rows`` / ``prefill_chunk`` / ``pad_prefill_rows`` trio.
+
+    ``chunk_rows``: tokens of one prompt consumed per iteration (one
+    prefill-attention chunk).  ``max_coresident_chunks``: how many chunks
+    from *different* slots may ride one fused launch.  ``pad_to``: lane
+    tile the legacy wavefront prefill-FFN operand rows pad to."""
+    chunk_rows: int = 2048
+    max_coresident_chunks: int = 2
+    pad_to: int = 128
+
+    def __post_init__(self):
+        for f_ in ("chunk_rows", "max_coresident_chunks", "pad_to"):
+            if getattr(self, f_) < 1:
+                raise ValueError(f"PrefillBudget.{f_} must be >= 1")
+
+    def pad_rows(self, rows: int) -> int:
+        """Rows of a prefill FFN operand: raw up to one tile, the next
+        ``pad_to`` multiple beyond (zero-padded)."""
+        return rows if rows <= self.pad_to else \
+            -(-rows // self.pad_to) * self.pad_to
+
+    def effective_chunk(self, cache_len: int) -> int:
+        """Chunk rows actually used against a ``cache_len`` cache: the
+        largest value <= min(chunk_rows, cache_len) dividing cache_len, so
+        chunk offsets are always multiples of the chunk and a full-chunk
+        scatter never crosses the cache end."""
+        c = min(self.chunk_rows, cache_len)
+        while cache_len % c:
+            c -= 1
+        return c
+
+
 @dataclass
 class ServeStats:
     """Slot-manager trajectory of one continuous-batching ``run()``."""
@@ -76,8 +119,13 @@ class ServeStats:
     prefill_only_steps: int = 0   # admissions with no active slot to decode
     slot_steps: int = 0           # sum of active slots over decode iterations
     tokens: int = 0
+    prefill_chunks: int = 0       # chunk launches (chunked admission)
+    fused_prefill_chunks: int = 0  # chunks whose program fused them with
+    #                                decode attention
     admissions: list = field(default_factory=list)   # (step, rid, slot)
     retirements: list = field(default_factory=list)  # (step, rid, reason)
+    admission_latencies: list = field(default_factory=list)  # steps from
+    #                                  arrival to first token, per admission
 
     @property
     def occupancy(self) -> float:
@@ -89,6 +137,18 @@ class ServeStats:
         """Fraction of decode iterations that carried a prefill partner."""
         return self.mixed_steps / max(self.decode_steps, 1)
 
+    @property
+    def fused_prefill_fraction(self) -> float:
+        """Fraction of prefill chunks that rode a fused launch with decode
+        attention (vs launching as planner singles)."""
+        return self.fused_prefill_chunks / max(self.prefill_chunks, 1)
+
+    @property
+    def mean_admission_latency(self) -> float:
+        """Mean engine steps from request arrival to its first token."""
+        lat = self.admission_latencies
+        return sum(lat) / len(lat) if lat else 0.0
+
     def describe(self) -> dict:
         return {
             "steps": self.steps, "decode_steps": self.decode_steps,
@@ -96,8 +156,12 @@ class ServeStats:
             "fused_mixed_steps": self.fused_mixed_steps,
             "prefill_only_steps": self.prefill_only_steps,
             "tokens": self.tokens,
+            "prefill_chunks": self.prefill_chunks,
+            "fused_prefill_chunks": self.fused_prefill_chunks,
             "occupancy": round(self.occupancy, 3),
             "mixed_fraction": round(self.mixed_fraction, 3),
+            "fused_prefill_fraction": round(self.fused_prefill_fraction, 3),
+            "mean_admission_latency": round(self.mean_admission_latency, 3),
         }
 
 
@@ -131,9 +195,11 @@ def _ffn_in_width(cfg: ModelConfig) -> int:
 
 
 def pad_prefill_rows(rows: int) -> int:
-    """Rows of the prefill-chunk FFN operand: the raw row count up to one
-    128-lane tile, the next 128 multiple beyond (zero-padded)."""
-    return rows if rows <= 128 else -(-rows // 128) * 128
+    """Deprecated: use ``PrefillBudget.pad_rows`` (the padding tile is a
+    budget policy now, not a module constant)."""
+    warnings.warn("pad_prefill_rows is deprecated — use "
+                  "PrefillBudget.pad_rows", DeprecationWarning, stacklevel=2)
+    return PrefillBudget().pad_rows(rows)
 
 
 def _mlp_from_h(cfg: ModelConfig, h, w_out):
@@ -156,7 +222,9 @@ class ServeEngine:
     def __init__(self, cfg: ModelConfig, params, *, batch: int = 8,
                  max_len: int = 512, rng_seed: int = 0,
                  plan_fusion: bool = False, measure=None,
-                 schedule_cache=None, scheduling: str = "continuous"):
+                 schedule_cache=None, scheduling: str = "continuous",
+                 prefill_budget: Optional[PrefillBudget] = None,
+                 reject_overlong: bool = False):
         if scheduling not in ("continuous", "wavefront"):
             raise ValueError(f"scheduling {scheduling!r} "
                              "(continuous or wavefront)")
@@ -165,6 +233,8 @@ class ServeEngine:
         self.batch = batch
         self.max_len = max_len
         self.scheduling = scheduling
+        self.prefill_budget = prefill_budget or PrefillBudget()
+        self.reject_overlong = reject_overlong
         self.rng = jax.random.PRNGKey(rng_seed)
         self._measure = measure
         self._schedule_cache = schedule_cache
@@ -176,11 +246,12 @@ class ServeEngine:
         self.executed = False
         self._mixed_steps: dict[int, object] = {}   # prompt len -> jitted step
         #                                             (wavefront co-prefill)
-        self._cb_steps: dict[int, object] = {}      # prefill len -> jitted step
+        self._cb_steps: dict[int, object] = {}      # n chunks -> jitted step
         #                                             (continuous, executed)
-        self._cb_mixed_fused: dict[int, bool] = {}  # prefill len -> program
-        #                                             fused prefill⊕decode-attn
-        self.cb_program_info: dict[int, dict] = {}  # prefill len -> launch
+        self._cb_fused_chunks: dict[int, frozenset] = {}  # n chunks -> chunk
+        #                                             indices the program
+        #                                             fused with decode attn
+        self.cb_program_info: dict[int, dict] = {}  # n chunks -> launch
         #                                             table (the supported
         #                                             reporting accessor)
         self._cb_decode = None                      # generic vmapped fallback
@@ -209,22 +280,39 @@ class ServeEngine:
     def _aligned_len(self) -> int:
         return max(128, -(-self.max_len // 128) * 128)
 
-    def decode_graph(self, *, prefill_rows: int = 2048,
-                     dynamic_length: bool = True):
+    def decode_graph(self, *, budget: Optional[PrefillBudget] = None,
+                     prefill_chunks: int = 0, ffn_rows: int = 0,
+                     dynamic_length: bool = True,
+                     prefill_rows: Optional[int] = None):
         """The serving step as a planner graph, with stable operand
         signatures (core/binding.py): decode-slot RMSNorm -> decode
         attention (per-slot valid prefixes in a (B, 1) int32 operand) ->
-        post-attention RMSNorm -> the router/FFN in-projection, plus a
-        prefill-chunk FFN matmul — the compute-bound partner of the
-        chunked-prefill⊕decode overlap mode.  ``prefill_rows=0`` drops the
-        prefill partner (a pure decode step: a dependency chain the planner
-        correctly leaves unfused).
+        post-attention RMSNorm -> the router/FFN in-projection.
+
+        ``prefill_chunks=N`` adds N independent blockwise flash-prefill
+        attention ops (kernels/prefill_attention) — one prompt chunk of one
+        prefilling slot each, ``budget.effective_chunk`` rows against the
+        slot's whole cache.  Compute-bound at scale, they are the paper's
+        heterogeneous partners for the memory-bound decode attention.
+
+        ``ffn_rows>0`` adds the legacy wavefront co-prefill partner: the
+        riding prompt's FFN in-projection matmul.  (``prefill_rows`` is the
+        deprecated alias for it.)  With neither, the graph is a pure decode
+        step: a dependency chain the planner correctly leaves unfused.
         """
         from repro.core import planner
         from repro.kernels.decode_attention import decode_attention_op
         from repro.kernels.matmul import matmul_1d_op
+        from repro.kernels.prefill_attention import prefill_attention_op
         from repro.kernels.rmsnorm import rmsnorm_op
 
+        if prefill_rows is not None:
+            warnings.warn("decode_graph(prefill_rows=) is deprecated — use "
+                          "ffn_rows (wavefront FFN partner) or "
+                          "prefill_chunks + PrefillBudget (chunked prefill)",
+                          DeprecationWarning, stacklevel=2)
+            ffn_rows = prefill_rows
+        budget = budget or self.prefill_budget
         cfg = self.cfg
         d, H, Hkv = cfg.d_model, cfg.num_heads, cfg.num_kv_heads
         D = cfg.resolved_head_dim
@@ -256,49 +344,85 @@ class ServeEngine:
                  planner.GraphOp(norm2, deps=frozenset({norm1.name,
                                                         att.name})),
                  planner.GraphOp(proj, deps=frozenset({norm2.name}))]
-        if prefill_rows:
-            # the prefill chunk's partner is always a full-FFN-width matmul
+        if ffn_rows:
+            # the wavefront co-prefill partner is a full-FFN-width matmul
             # (compute-bound at scale) — for MoE that is the expert FFN, not
             # the tiny router projection the decode side plans
             pf_n = (max(cfg.d_ff, d) if cfg.moe is not None
                     else _ffn_in_width(cfg))
-            pf = matmul_1d_op(M=prefill_rows, K=d, N=pf_n,
-                              dtype=dt, bm=min(128, prefill_rows))
+            pf = matmul_1d_op(M=ffn_rows, K=d, N=pf_n,
+                              dtype=dt, bm=min(128, ffn_rows))
             pf = dataclasses.replace(pf, name="prefill_ffn")
             graph.append(planner.GraphOp(pf))
+        if prefill_chunks:
+            C = budget.effective_chunk(S)
+            for i in range(prefill_chunks):
+                pa = prefill_attention_op(
+                    C, S, H, Hkv, D, dtype=dt, ck=ck,
+                    name=f"prefill_attn{i}_C{C}_S{S}_H{H}kv{Hkv}")
+                graph.append(planner.GraphOp(pa))
         return graph
 
-    def plan_decode_fusion(self, *, max_ways: int = 3, prefill_chunk: int = 2048,
-                           measure=None, cache=None):
+    def plan_decode_fusion(self, *, max_ways: Optional[int] = None,
+                           budget: Optional[PrefillBudget] = None,
+                           measure=None, cache=None,
+                           prefill_chunk: Optional[int] = None):
         """Register the serving step's ops as a planner graph (ROADMAP) and
         plan the bundles; ``build_decode_program`` lowers the result onto
-        the live slot state.  With ``measure`` the schedule is profiled, and
-        ``cache`` makes every later engine start skip the search entirely.
+        the live slot state.  The graph carries the budget's full chunk
+        complement (``max_coresident_chunks`` flash-prefill ops), so the
+        plan shown at engine start is the steady mixed-iteration plan.
+        With ``measure`` the schedule is profiled, and ``cache`` makes
+        every later engine start skip the search entirely.
         """
         from repro.core import planner
 
-        graph = self.decode_graph(prefill_rows=prefill_chunk)
+        if prefill_chunk is not None:
+            warnings.warn("plan_decode_fusion(prefill_chunk=) is deprecated "
+                          "— pass budget=PrefillBudget(chunk_rows=...)",
+                          DeprecationWarning, stacklevel=2)
+            budget = dataclasses.replace(budget or self.prefill_budget,
+                                         chunk_rows=prefill_chunk)
+        budget = budget or self.prefill_budget
+        n = budget.max_coresident_chunks
+        if max_ways is None:
+            max_ways = 2 + n                 # {att, chunk_0..chunk_{n-1}} +1
+        graph = self.decode_graph(budget=budget, prefill_chunks=n)
         return planner.plan(graph, max_ways=max_ways, measure=measure,
                             cache=cache)
 
     # ------------------------------------------------------------------
     # Executed decode step: plan -> program -> live slot state
     # ------------------------------------------------------------------
-    def build_decode_program(self, *, prefill_rows: int = 0,
-                             interpret: Optional[bool] = None):
+    def build_decode_program(self, *, prefill_chunks: int = 0,
+                             ffn_rows: int = 0,
+                             interpret: Optional[bool] = None,
+                             prefill_rows: Optional[int] = None):
         """Compile the planned decode step into an executor Program bound to
         the live slot state.  The binding setters carry the model glue: the
         norm's output slot projects QKV, applies RoPE at each slot's own
-        position and scatters k/v into each slot's cache row; the attention
-        output slot applies W_o and the residual; the projection output slot
-        finishes the MLP and the second residual.  The state's ``pos`` key
-        is the per-slot position vector ``(B,)`` — the wavefront path
-        broadcasts its scalar wave position into it (see ``_wave_state``).
+        position and scatters k/v into each slot's cache row (masked by the
+        per-slot ``act`` vector, so prefilling/idle slots never see a stale
+        garbage write); the attention output slot applies W_o and the
+        residual; the projection output slot finishes the MLP and the
+        second residual.  Each of the ``prefill_chunks`` flash-prefill ops
+        reads its own slot's cache rows (``pf{i}_slot``) at its own chunk
+        offset (``pf{i}_off``) — the step function scatters the chunk's k/v
+        *before* the program runs.  The state's ``pos`` key is the per-slot
+        position vector ``(B,)`` — the wavefront path broadcasts its scalar
+        wave position into it (see ``_wave_state``).  ``prefill_rows`` is
+        the deprecated alias for ``ffn_rows``.
         """
         from repro.core import executor, planner
         from repro.core.binding import BindingRegistry, Slot
         from repro.models import layers
 
+        if prefill_rows is not None:
+            warnings.warn("build_decode_program(prefill_rows=) is "
+                          "deprecated — use ffn_rows (wavefront FFN "
+                          "partner) or prefill_chunks (chunked prefill)",
+                          DeprecationWarning, stacklevel=2)
+            ffn_rows = prefill_rows
         cfg = self.cfg
         if interpret is None:
             interpret = jax.default_backend() != "tpu"
@@ -307,12 +431,14 @@ class ServeEngine:
         dt = jnp.dtype(cfg.dtype)
         B = self.batch
 
-        graph = self.decode_graph(prefill_rows=prefill_rows)
+        graph = self.decode_graph(prefill_chunks=prefill_chunks,
+                                  ffn_rows=ffn_rows)
         # allow_same_bound: at full scale the prefill chunk is genuinely
         # compute-bound (the paper pairing); at smoke scale everything is
         # memory-bound and the launch/ramp amortization still decides —
         # admission stays the planner's, never forced
-        plan = planner.plan(graph, max_ways=3, allow_same_bound=True,
+        plan = planner.plan(graph, max_ways=max(3, 2 + prefill_chunks),
+                            allow_same_bound=True,
                             measure=self._measure,
                             cache=self._schedule_cache)
 
@@ -325,8 +451,16 @@ class ServeEngine:
             state = dict(state)
             state["q"] = q[:, 0]
             rows = jnp.arange(B)
-            state["k_cache"] = state["k_cache"].at[rows, state["pos"]].set(k[:, 0])
-            state["v_cache"] = state["v_cache"].at[rows, state["pos"]].set(v[:, 0])
+            # act-masked scatter: only decoding slots land k/v — a
+            # prefilling slot's row at `pos` is live chunk data this very
+            # step and must not be clobbered by its stale last-token write
+            act = state["act"][:, None, None]
+            k_row = jnp.where(act, k[:, 0],
+                              state["k_cache"][rows, state["pos"]])
+            v_row = jnp.where(act, v[:, 0],
+                              state["v_cache"][rows, state["pos"]])
+            state["k_cache"] = state["k_cache"].at[rows, state["pos"]].set(k_row)
+            state["v_cache"] = state["v_cache"].at[rows, state["pos"]].set(v_row)
             return state
 
         def att_put(state, o):
@@ -356,17 +490,32 @@ class ServeEngine:
         proj_name = "moe_router" if cfg.moe is not None else "ffn_proj"
         reg.bind(proj_name, x="h2", w="w_in",
                  outputs={"out": Slot(put=proj_put)})
-        if prefill_rows:
+        if ffn_rows:
             reg.bind("prefill_ffn", x="pf_h2", w="w_in", outputs={"out": "pf_ffn"})
+        for g in graph:
+            if not g.op.name.startswith("prefill_attn"):
+                continue
+            i = int(g.op.name.split("_")[1][4:])      # prefill_attn{i}_...
+            # the chunk reads ITS OWN slot's cache rows — a (S, Hkv, D)
+            # gather the decode scatter never touches (act masks that slot)
+            reg.bind(g.op.name,
+                     inputs={"off": f"pf{i}_off", "q": f"pf{i}_q",
+                             "k": Slot(get=lambda s, i=i:
+                                       s["k_cache"][s[f"pf{i}_slot"]]),
+                             "v": Slot(get=lambda s, i=i:
+                                       s["v_cache"][s[f"pf{i}_slot"]])},
+                     outputs={"o": f"pf{i}_o", "m": f"pf{i}_m",
+                              "l": f"pf{i}_l"})
         return executor.compile_plan(plan, bindings=reg, interpret=interpret)
 
-    def _slot_state(self, params, cache, x, pos):
+    def _slot_state(self, params, cache, x, pos, act):
         """State pytree for the executed program; ``pos`` is the per-slot
-        position vector (B,)."""
+        position vector (B,), ``act`` the per-slot decoding mask (B,) bool
+        gating the decode k/v scatter."""
         run = lm.layer_runs(self.cfg)[0]
         p = params[run.name]
         return {
-            "x": x, "pos": pos,
+            "x": x, "pos": pos, "act": act,
             "norm1_scale": p["norm1"]["scale"].reshape(1, -1),
             "norm2_scale": p["norm2"]["scale"].reshape(1, -1),
             "w_qkv": p["attn"]["w_qkv"], "w_o": p["attn"]["w_o"],
@@ -376,9 +525,11 @@ class ServeEngine:
 
     def _wave_state(self, params, cache, x):
         """Wavefront form: the scalar wave position broadcasts into the
-        per-slot (B,) position vector the program contract expects."""
+        per-slot (B,) position vector the program contract expects; every
+        wavefront slot decodes, so the scatter mask is all-true."""
         pos = jnp.full((self.batch,), cache["pos"], jnp.int32)
-        return self._slot_state(params, cache, x, pos)
+        return self._slot_state(params, cache, x, pos,
+                                jnp.ones((self.batch,), bool))
 
     def _coprefill_to_ffn_in(self, params, pf_tokens, P: int, pf_rows: int):
         """Run a riding prompt's prefill up to the FFN in-projection input
@@ -422,8 +573,8 @@ class ServeEngine:
         S = self._aligned_len()
         P = prefill_len
         rows = B * P
-        pf_rows = pad_prefill_rows(rows)
-        program = self.build_decode_program(prefill_rows=pf_rows if P else 0)
+        pf_rows = self.prefill_budget.pad_rows(rows)
+        program = self.build_decode_program(ffn_rows=pf_rows if P else 0)
 
         def step(params, cache, tokens, pf_tokens=None):
             p = params[run.name]
@@ -556,39 +707,66 @@ class ServeEngine:
             self._refill_write = jax.jit(write)
         return self._refill_write(cache, c1, jnp.asarray(slot)), logits[0]
 
-    def _make_cb_step(self, prefill_len: int):
+    def _make_cb_step(self, n_chunks: int):
         """The jitted executed continuous step: decode every slot at its own
-        cache position; with ``prefill_len > 0`` one waiting request's
-        (1, P) prompt rides along — its FFN in-projection joins the fused
-        launch (the steady mixed prefill⊕decode bundle) and the finished
-        prefill lands directly in the refill slot's cache rows."""
+        cache position; with ``n_chunks > 0``, that many prompt chunks from
+        *prefilling* slots ride along.  Each chunk's k/v is scattered into
+        its slot's cache rows before the program runs, its flash-prefill
+        attention shares the decode launch (the steady mixed
+        prefill⊕decode bundle), and the chunk's FFN + residuals finish
+        after the program.  The final chunk's last valid row yields the
+        request's first-token logits."""
         from repro.models import layers
 
         cfg = self.cfg
         B, d = self.batch, cfg.d_model
         run = lm.layer_runs(cfg)[0]
-        P = prefill_len
-        pf_rows = pad_prefill_rows(P)
-        program = self.build_decode_program(prefill_rows=pf_rows if P else 0)
-        self._cb_mixed_fused[P] = any(
-            "prefill_ffn" in ms
-            and any(m.startswith("decode_attn") for m in ms)
-            for ms in program.fused_members)
-        self.cb_program_info[P] = {
+        dt = jnp.dtype(cfg.dtype)
+        n = n_chunks
+        C = self.prefill_budget.effective_chunk(self._aligned_len())
+        program = self.build_decode_program(prefill_chunks=n)
+        self._cb_fused_chunks[n] = frozenset(
+            i for i in range(n)
+            if any(any(m.startswith(f"prefill_attn{i}_") for m in ms)
+                   and any(m.startswith("decode_attn") for m in ms)
+                   for ms in program.fused_members))
+        self.cb_program_info[n] = {
             "fused_launches": program.n_fused,
             "total_launches": len(program.steps),
             "steps": program.describe(),
         }
 
-        def step(params, cache, tokens, active, slot=None, pf_tokens=None):
+        def step(params, cache, tokens, active,
+                 ch_slots=None, ch_offs=None, ch_valid=None, ch_tokens=None):
             p = params[run.name]
             x = layers.embed_onehot(params["embed"], tokens[:, None], d)
-            state = self._slot_state(params, cache, x[:, 0], cache["pos"])
+            state = self._slot_state(params, cache, x[:, 0], cache["pos"],
+                                     active)
 
-            if P:
-                # waiting request's (1, P) prefill, up to the FFN in-proj
-                state["pf_h2"], xm, kp, vp = self._coprefill_to_ffn_in(
-                    params, pf_tokens, P, pf_rows)
+            # chunk pre-work: embed + norm + QKV + RoPE at absolute chunk
+            # positions, then land the chunk's k/v in its slot's cache rows
+            # BEFORE the program (the prefill kernel only reads the cache)
+            kc, vc = state["k_cache"], state["v_cache"]
+            for i in range(n):
+                xp, _ = lm._embed_inputs(cfg, params,
+                                         {"tokens": ch_tokens[i][None]})
+                hp = layers.apply_norm(cfg, p["norm1"], xp)
+                qp, kp, vp = layers.qkv_project(cfg, p["attn"], hp)
+                positions = ch_offs[i] + jnp.arange(C)[None, :]
+                qp = layers.rope(qp, positions, cfg.rope_theta,
+                                 cfg.rope_fraction)
+                kp = layers.rope(kp, positions, cfg.rope_theta,
+                                 cfg.rope_fraction)
+                kc = jax.lax.dynamic_update_slice(
+                    kc, kp.astype(kc.dtype), (ch_slots[i], ch_offs[i], 0, 0))
+                vc = jax.lax.dynamic_update_slice(
+                    vc, vp.astype(vc.dtype), (ch_slots[i], ch_offs[i], 0, 0))
+                state[f"pf{i}_q"] = qp[0].astype(dt)
+                state[f"pf{i}_x"] = xp[0]
+                state[f"pf{i}_slot"] = ch_slots[i]
+                state[f"pf{i}_off"] = jnp.reshape(ch_offs[i],
+                                                  (1, 1)).astype(jnp.int32)
+            state["k_cache"], state["v_cache"] = kc, vc
 
             state = program(state)
 
@@ -596,31 +774,39 @@ class ServeEngine:
                                    state["x_out"][:, None, :].astype(x.dtype))
             logits = lm._head(cfg, params, xf)[:, 0]
             new_pos = jnp.where(active, cache["pos"] + 1, cache["pos"])
-            kc, vc = state["k_cache"], state["v_cache"]
-            if not P:
-                return logits, {"pos": new_pos,
-                                run.name: {"k": kc, "v": vc}}
+            new_cache = {"pos": new_pos,
+                         run.name: {"k": state["k_cache"],
+                                    "v": state["v_cache"]}}
+            if not n:
+                return logits, new_cache
 
-            # finish the refill's MLP + residual, land its cache rows
-            ff = _mlp_from_h(cfg, state["pf_ffn"][:P]
-                             .astype(jnp.dtype(cfg.dtype)).reshape(1, P, -1),
-                             p["mlp"]["w_out"])
-            xop = xm + ff
-            kc = jax.lax.dynamic_update_slice(kc, kp, (slot, 0, 0, 0))
-            vc = jax.lax.dynamic_update_slice(vc, vp, (slot, 0, 0, 0))
-            new_pos = new_pos.at[slot].set(P)
-            xfp = layers.apply_norm(cfg, params["final_norm"], xop[:, -1:])
-            pf_logits = lm._head(cfg, params, xfp)[0, 0]
-            return (logits, {"pos": new_pos, run.name: {"k": kc, "v": vc}},
-                    pf_logits)
+            # chunk post-work: W_o + residual, norm2 + MLP + residual, and
+            # the (possibly partial) chunk's last valid row -> first-token
+            # logits; positions advance by the chunk's valid rows
+            pf_logits = []
+            for i in range(n):
+                o = state[f"pf{i}_o"].astype(dt)                 # (C, H, D)
+                attn_out = o.reshape(C, -1) @ p["attn"]["w_o"]
+                xm = state[f"pf{i}_x"] + attn_out
+                h2 = layers.apply_norm(cfg, p["norm2"], xm[None])
+                ff = layers.mlp(cfg, p["mlp"], h2)[0]
+                xop = xm + ff
+                xlast = jax.lax.dynamic_slice_in_dim(xop, ch_valid[i] - 1, 1)
+                xfp = layers.apply_norm(cfg, params["final_norm"],
+                                        xlast[None])
+                pf_logits.append(lm._head(cfg, params, xfp)[0, 0])
+                new_pos = new_pos.at[ch_slots[i]].set(ch_offs[i]
+                                                      + ch_valid[i])
+            new_cache["pos"] = new_pos
+            return logits, new_cache, jnp.stack(pf_logits)
 
         return step
 
-    def _cb_step(self, prefill_len: int):
-        if prefill_len not in self._cb_steps:
-            self._cb_steps[prefill_len] = jax.jit(
-                self._make_cb_step(prefill_len))
-        return self._cb_steps[prefill_len]
+    def _cb_step(self, n_chunks: int):
+        if n_chunks not in self._cb_steps:
+            self._cb_steps[n_chunks] = jax.jit(
+                self._make_cb_step(n_chunks))
+        return self._cb_steps[n_chunks]
 
     # ------------------------------------------------------------------
     def _wave_tokens(self, wave: list[Request]) -> np.ndarray:
@@ -682,6 +868,7 @@ class ServeEngine:
         req.out_tokens.append(tok)
         stats.tokens += 1
         stats.admissions.append((stats.steps - 1, req.rid, slot))
+        stats.admission_latencies.append(stats.steps - 1 - req.arrival)
         pos_h[slot] = len(req.prompt)
         reason = self._retire_reason(req, tok, len(req.out_tokens),
                                      pos_h[slot], check_eos=False)
@@ -695,24 +882,167 @@ class ServeEngine:
             last[slot] = tok
 
     def _run_continuous(self, requests: list[Request]) -> list[Request]:
-        """Iteration-level continuous batching: every step decodes all
-        active slots at their own cache positions, retires finished slots,
-        and refills EVERY free slot from the arrival queue — lowest free
-        slot first, arrival order first (deterministic refill given a fixed
-        arrival queue).  On the executed path the first refill's prompt
-        co-prefills inside the decode step's fused launch; further refills
-        (and all refills on the fallback path) prefill alongside in the
-        same iteration."""
-        B = self.batch
+        """Iteration-level continuous batching.  Prompts longer than the
+        cache can never be admitted; with ``reject_overlong=True`` the
+        legacy single-iteration admission contract is restored and prompts
+        exceeding one iteration's prefill budget are rejected too.  The
+        executed path admits by chunks (``_run_continuous_chunked``); the
+        hand-wired fallback prefills whole prompts alongside the decode
+        (``_run_continuous_plain``)."""
+        chunk = self.prefill_budget.effective_chunk(self._aligned_len())
         for r in requests:
             if len(r.prompt) > self.max_len:
                 raise ValueError(
                     f"request {r.rid}: prompt length {len(r.prompt)} exceeds "
                     f"max_seq_len {self.max_len} — continuous batching "
                     f"cannot admit it (raise max_len or truncate the prompt)")
-        self.stats = stats = ServeStats(batch=B)
+            if self.reject_overlong and len(r.prompt) > chunk:
+                raise ValueError(
+                    f"request {r.rid}: prompt length {len(r.prompt)} exceeds "
+                    f"the per-iteration prefill budget {chunk} and this "
+                    f"engine was built with reject_overlong=True (drop the "
+                    f"flag to admit it in chunks)")
+        self.stats = ServeStats(batch=self.batch)
         # FIFO by arrival step, submission order breaking ties
         waiting = sorted(requests, key=lambda r: r.arrival)
+        if self.executed:
+            return self._run_continuous_chunked(requests, waiting)
+        return self._run_continuous_plain(requests, waiting)
+
+    def _run_continuous_chunked(self, requests, waiting) -> list[Request]:
+        """Executed continuous batching with chunk-granular admission:
+        every step decodes all active slots at their own cache positions
+        while up to ``max_coresident_chunks`` *prefilling* slots each
+        consume one prompt chunk inside the same fused launch.  A freshly
+        emptied slot's first chunk rides the very step it is claimed; a
+        slot whose occupant retires deterministically this step is reserved
+        and starts chunking the next step (its retiree's final decode must
+        read the cache first).  A prompt completing its last chunk samples
+        its first token from that chunk's final valid row."""
+        B = self.batch
+        stats = self.stats
+        budget = self.prefill_budget
+        C = budget.effective_chunk(self._aligned_len())
+        slots: list[Optional[Request]] = [None] * B   # decoding occupants
+        pref: dict[int, dict] = {}                    # slot -> prefilling
+        #                                               {req, done, ready}
+        pos_h = [0] * B                               # host mirror of pos
+        last = np.zeros(B, np.int32)
+        cache = self._init_slot_cache()
+
+        while waiting or any(s is not None for s in slots) or pref:
+            step_i = stats.steps
+            arrived = [r for r in waiting if r.arrival <= step_i]
+            # claim empty slots now (their first chunk rides this very
+            # step); deterministically-retiring slots are only *reserved*
+            # — their chunk starts next step, after the retiree's final
+            # decode has read the cache (EOS retirements are not
+            # predictable; those slots are claimed one step later)
+            reserved = []
+            for b in range(B):
+                if not arrived:
+                    break
+                if slots[b] is None and b not in pref:
+                    req = arrived.pop(0)
+                    waiting.remove(req)
+                    pref[b] = {"req": req, "done": 0, "ready": step_i}
+            for b in range(B):
+                if not arrived:
+                    break
+                if slots[b] is not None and self._will_retire_this_step(
+                        slots[b], pos_h[b]):
+                    req = arrived.pop(0)
+                    waiting.remove(req)
+                    reserved.append((b, req))
+            # chunk selection: lowest prefilling slot index first, capped
+            # by the budget's co-residency
+            sel = [b for b in sorted(pref) if pref[b]["ready"] <= step_i]
+            sel = sel[:budget.max_coresident_chunks]
+            active = np.array([s is not None for s in slots])
+            n_active = int(active.sum())
+            n = len(sel)
+
+            if n == 0 and n_active == 0:
+                stats.steps += 1                 # idle: future arrivals
+                continue
+
+            if n:
+                ch_valid = [min(C, len(pref[b]["req"].prompt)
+                                - pref[b]["done"]) for b in sel]
+                ch_tok = np.zeros((n, C), np.int32)
+                for j, b in enumerate(sel):
+                    off = pref[b]["done"]
+                    ch_tok[j, :ch_valid[j]] = np.asarray(
+                        pref[b]["req"].prompt[off:off + ch_valid[j]],
+                        np.int32)
+                logits, cache, pf_logits = self._cb_step(n)(
+                    self.params, cache, jnp.asarray(last),
+                    jnp.asarray(active),
+                    jnp.asarray(np.asarray(sel, np.int32)),
+                    jnp.asarray(np.asarray([pref[b]["done"] for b in sel],
+                                           np.int32)),
+                    jnp.asarray(np.asarray(ch_valid, np.int32)),
+                    jnp.asarray(ch_tok))
+            else:
+                logits, cache = self._cb_step(0)(
+                    self.params, cache, jnp.asarray(last),
+                    jnp.asarray(active))
+
+            stats.steps += 1
+            if n_active:
+                stats.decode_steps += 1
+                stats.slot_steps += n_active
+            else:
+                stats.prefill_only_steps += 1
+            if n and n_active:
+                stats.mixed_steps += 1
+                if self._cb_fused_chunks[n]:
+                    stats.fused_mixed_steps += 1
+            if n:
+                stats.prefill_chunks += n
+                stats.fused_prefill_chunks += len(self._cb_fused_chunks[n])
+
+            logits_np = np.asarray(logits, np.float32)
+            for b in range(B):
+                req = slots[b]
+                if req is None:
+                    continue
+                pos_h[b] += 1
+                tok = self._sample(logits_np[b], req)
+                req.out_tokens.append(tok)
+                stats.tokens += 1
+                last[b] = tok
+                reason = self._retire_reason(req, tok, len(req.out_tokens),
+                                             pos_h[b])
+                if reason:
+                    req.done = True
+                    slots[b] = None
+                    stats.retirements.append((stats.steps - 1, req.rid,
+                                              reason))
+            if n:
+                pf_np = np.asarray(pf_logits, np.float32)
+                for j, b in enumerate(sel):
+                    ent = pref[b]
+                    ent["done"] += ch_valid[j]
+                    pos_h[b] = ent["done"]
+                    if ent["done"] >= len(ent["req"].prompt):
+                        del pref[b]                    # prefill complete
+                        self._admit(ent["req"], b, pf_np[j], slots, pos_h,
+                                    last)
+            for b, req in reserved:
+                pref[b] = {"req": req, "done": 0, "ready": stats.steps}
+        return requests
+
+    def _run_continuous_plain(self, requests, waiting) -> list[Request]:
+        """Fallback continuous batching (hand-wired decode): every step
+        decodes all active slots, retires finished slots, and refills EVERY
+        free slot from the arrival queue — lowest free slot first, arrival
+        order first (deterministic refill given a fixed arrival queue).
+        Whole prompts prefill alongside the decode in the same iteration; a
+        slot whose request retires deterministically this step (budget /
+        cache-full) refills in that same iteration."""
+        B = self.batch
+        stats = self.stats
         slots: list[Optional[Request]] = [None] * B
         pos_h = [0] * B                               # host mirror of pos
         last = np.zeros(B, np.int32)
@@ -724,9 +1054,8 @@ class ServeEngine:
             # *deterministically* this very step (budget / cache-full): the
             # retiring slot's last decode reads the cache before the
             # refill's prefill rows land, so the new prompt co-prefills in
-            # the same iteration — no idle step between retire and refill
-            # (EOS retirements are not predictable; those slots refill one
-            # step later)
+            # the same iteration (EOS retirements are not predictable;
+            # those slots refill one step later)
             free = [i for i, s in enumerate(slots)
                     if s is None or self._will_retire_this_step(s, pos_h[i])]
             arrived = [r for r in waiting if r.arrival <= step_i]
@@ -747,38 +1076,17 @@ class ServeEngine:
                     self._admit(req, slot, pf_logits, slots, pos_h, last)
                 continue
 
-            toks = jnp.asarray(last)
-            act = jnp.asarray(active)
-            riding = None                 # refill carried by the fused launch
-            if self.executed and refills:
-                riding, refills = refills[0], refills[1:]
-            if self.executed:
-                P = len(riding[1].prompt) if riding else 0
-                step_fn = self._cb_step(P)
-                if P:
-                    slot, req = riding
-                    pf_toks = jnp.asarray(
-                        np.asarray(req.prompt, np.int32)[None])
-                    logits, cache, ride_logits = step_fn(
-                        self.params, cache, toks, act,
-                        jnp.asarray(slot), pf_toks)
-                else:
-                    logits, cache = step_fn(self.params, cache, toks, act)
-            else:
-                logits, cache = self._cb_plain_decode()(
-                    self.params, cache, toks, act)
+            logits, cache = self._cb_plain_decode()(
+                self.params, cache, jnp.asarray(last), jnp.asarray(active))
             extra_logits = []
-            for slot, req in refills:     # side-by-side (unfused) refills
+            for slot, req in refills:     # side-by-side prefills
                 cache, pf_logits = self._cb_refill(cache, slot, req.prompt)
                 extra_logits.append(pf_logits)
             stats.steps += 1
             stats.decode_steps += 1
             stats.slot_steps += n_active
-            if riding is not None or refills:
+            if refills:
                 stats.mixed_steps += 1
-                if riding is not None and self._cb_mixed_fused.get(
-                        len(riding[1].prompt)):
-                    stats.fused_mixed_steps += 1
 
             logits_np = np.asarray(logits, np.float32)
             for b in range(B):
@@ -797,9 +1105,6 @@ class ServeEngine:
                     slots[b] = None
                     stats.retirements.append((stats.steps - 1, req.rid,
                                               reason))
-            if riding is not None:
-                self._admit(riding[1], riding[0], ride_logits, slots, pos_h,
-                            last)
             for (slot, req), pf_logits in zip(refills, extra_logits):
                 self._admit(req, slot, pf_logits, slots, pos_h, last)
         return requests

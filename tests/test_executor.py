@@ -1,7 +1,7 @@
 """Plan->program executor: interpret-mode ULP-tolerance parity of the
 executed train and serve hot paths against the hand-wired references,
 dep-forced leftover ops, zero-search replans, binding-contract errors,
-schedule-cache LRU ops, and the 2-op accessor deprecations."""
+schedule-cache LRU ops, and the planner's contracted-cycle guard."""
 import dataclasses
 
 import jax
@@ -291,11 +291,11 @@ def test_executed_engine_tokens_match_handwired(serve_setup):
 
 
 def test_serve_mixed_program_fuses_prefill_with_decode_attention(serve_setup):
-    """The mixed program's fused bundle pairs the memory-bound cache
-    streaming with the prefill chunk's FFN matmul — and no graph op is
-    left hand-wired (every member launches via the executor)."""
+    """The wavefront mixed program's fused bundle pairs the memory-bound
+    cache streaming with the riding prompt's FFN matmul — and no graph op
+    is left hand-wired (every member launches via the executor)."""
     _cfg_, _params, eng = serve_setup
-    prog = eng.build_decode_program(prefill_rows=128)
+    prog = eng.build_decode_program(ffn_rows=128)
     assert prog.n_fused >= 1
     fused_members = [m for s in prog.steps if s.fused for m in s.members]
     assert "prefill_ffn" in fused_members
@@ -335,21 +335,38 @@ def test_unsupported_config_falls_back_to_handwired():
 
 
 # ---------------------------------------------------------------------------
-# deprecated 2-op accessors
+# planner contracted-cycle guard
 # ---------------------------------------------------------------------------
-def test_two_op_compat_accessors_warn():
-    nrm = rmsnorm_op(R=128, d=128, dtype=jnp.float32, bm=64)
-    mm = matmul_1d_op(M=128, K=128, N=128, dtype=jnp.float32, bm=64)
-    res = autotuner.search((nrm, mm))
-    with pytest.warns(DeprecationWarning, match="SearchResult"):
-        assert res.a is res.ops[0]
-    with pytest.warns(DeprecationWarning, match="SearchResult"):
-        assert res.b is res.ops[1]
-    plan = planner.plan([planner.GraphOp(nrm), planner.GraphOp(mm)],
-                        allow_same_bound=True)
-    if plan.fused:
-        with pytest.warns(DeprecationWarning, match="FusionDecision"):
-            assert plan.fused[0].a == plan.fused[0].members[0]
+def test_planner_never_forms_cyclic_bundles():
+    """Two mutually-feeding bundle candidates (att<-n1, pf<-pa) must not
+    both form: contracting {att, pa} and {n1, pf} leaves a 2-cycle the
+    executor would refuse to toposort.  The planner's acyclicity guard
+    keeps the second grouping out, so compile_plan always succeeds."""
+    from repro.core.binding import default_bindings, synth_state
+
+    att = dataclasses.replace(
+        rmsnorm_op(R=1024, d=512, dtype=jnp.float32, bm=128), name="att")
+    pa = dataclasses.replace(
+        matmul_1d_op(M=1024, K=512, N=512, dtype=jnp.float32, bm=128),
+        name="pa")
+    n1 = dataclasses.replace(
+        rmsnorm_op(R=896, d=512, dtype=jnp.float32, bm=128), name="n1")
+    pf = dataclasses.replace(
+        matmul_1d_op(M=896, K=512, N=512, dtype=jnp.float32, bm=128),
+        name="pf")
+    graph = [planner.GraphOp(n1),
+             planner.GraphOp(att, deps=frozenset({"n1"})),
+             planner.GraphOp(pa),
+             planner.GraphOp(pf, deps=frozenset({"pa"}))]
+    plan = planner.plan(graph, max_ways=2, allow_same_bound=True)
+    # every accepted grouping stays executable
+    ops = [g.op for g in plan.graph]
+    prog = executor.compile_plan(plan, bindings=default_bindings(ops),
+                                 interpret=True)
+    prog(synth_state(ops))
+    member_sets = [set(d.members) for d in plan.fused]
+    assert not ({"att", "pa"} in member_sets
+                and {"n1", "pf"} in member_sets), plan.summary()
 
 
 # ---------------------------------------------------------------------------
