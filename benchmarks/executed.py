@@ -24,6 +24,12 @@ live operands:
                  token-for-token verified against the legacy wavefront
                  engine, with a zero-new-searches replan over the shared
                  schedule cache.
+  serve_stitched_vs_unstitched — the same mixed step planned with and
+                 without epilogue stitching (core/stitch.py): the stitched
+                 program must carry its producer→consumer chains as bundle
+                 members, emit identical tokens, and beat the unstitched
+                 program strictly on predicted HBM traffic and the
+                 cost-model launch proxy.
 
 Each program is verified against the hand-wired reference (jnp oracles /
 ``run_single`` chains / the wavefront differential oracle) and the
@@ -275,10 +281,78 @@ def _serve_continuous_row(interpret: bool) -> dict:
     }
 
 
+def _serve_stitched_row(interpret: bool) -> dict:
+    """Epilogue stitching (core/stitch.py) as a perf delta: the same mixed
+    decode⊕prefill step planned twice — once with the decode graph's
+    producer→consumer pairs stitched into chain members, once with the
+    pairs as separate ops — and compared on the planner's own deterministic
+    books: predicted HBM traffic (the stitched program never round-trips
+    the normed hidden state or the pre-activation FFN block) and the
+    cost-model launch proxy (``cost_model.native_time`` summed over the
+    program's ops).  Token streams are verified identical, so the delta is
+    pure traffic/launch accounting, not a numerics trade."""
+    import jax
+    import numpy as np
+
+    from repro.configs import get_config
+    from repro.core.cost_model import native_time
+    from repro.core.stitch import CHAIN_SEP
+    from repro.models import lm
+    from repro.serve.engine import PrefillBudget, Request, ServeEngine
+
+    cfg = dataclasses.replace(get_config("granite-3-2b").reduced(),
+                              dtype="float32")
+    params = lm.init(cfg, jax.random.PRNGKey(0))
+    budget = PrefillBudget(chunk_rows=8, max_coresident_chunks=2)
+
+    def requests():
+        rng = np.random.default_rng(11)
+        return [Request(rid=i,
+                        prompt=rng.integers(1, cfg.vocab_size, L)
+                        .astype(np.int32), max_new_tokens=m)
+                for i, (L, m) in enumerate(zip((6, 15, 41), (3, 4, 3)))]
+
+    progs, streams = {}, {}
+    for label, stitched in (("stitched", True), ("unstitched", False)):
+        eng = ServeEngine(cfg, params, batch=2, max_len=48,
+                          scheduling="continuous", plan_fusion=True,
+                          prefill_budget=budget, stitch_epilogues=stitched)
+        assert eng.executed
+        progs[label] = eng.build_decode_program(prefill_chunks=2)
+        rs = requests()
+        eng.run(rs)
+        streams[label] = [r.out_tokens for r in rs]
+    assert streams["stitched"] == streams["unstitched"], \
+        "stitching changed the token stream"
+
+    def books(prog):
+        ops = [g.op for g in prog.graph]
+        return (sum(op.hbm_bytes for op in ops),
+                sum(native_time(op) for op in ops))
+
+    hbm_s, t_s = books(progs["stitched"])
+    hbm_u, t_u = books(progs["unstitched"])
+    chains = [g.op.name for g in progs["stitched"].graph
+              if CHAIN_SEP in g.op.name]
+    return {
+        "program": "serve_stitched_vs_unstitched",
+        "fused_launches": progs["stitched"].n_fused,
+        "total_launches": len(progs["stitched"].steps),
+        "unstitched_launches": len(progs["unstitched"].steps),
+        "stitched_chains": chains,
+        "steps": progs["stitched"].describe(),
+        "token_mismatches": 0,            # asserted identical above
+        "predicted_hbm_bytes_stitched": hbm_s,
+        "predicted_hbm_bytes_unstitched": hbm_u,
+        "proxy_time_stitched_s": t_s,
+        "proxy_time_unstitched_s": t_u,
+    }
+
+
 def run(backend: str = "interpret", out_path: str | None = None) -> dict:
     interpret = backend != "tpu" and backend != "gpu"
     rows = [_train_update_row(interpret), _serve_decode_row(interpret),
-            _serve_continuous_row(interpret)]
+            _serve_continuous_row(interpret), _serve_stitched_row(interpret)]
     for r in rows:
         if "max_err" in r:
             assert r["max_err"] < 2e-4, (r["program"], r["max_err"])
@@ -288,10 +362,11 @@ def run(backend: str = "interpret", out_path: str | None = None) -> dict:
         assert r["fused_launches"] >= 1, r["program"]
         err = (f"max_err {r['max_err']:.1e}" if "max_err" in r
                else f"{r['token_mismatches']} token mismatches")
+        wall = (f", executed {r['executed_s'] * 1e3:.1f}ms"
+                if "executed_s" in r else "")
         print(f"# executed {r['program']}: {r['fused_launches']} fused / "
-              f"{r['total_launches']} launches, {err}, "
-              f"executed {r['executed_s'] * 1e3:.1f}ms")
-    cont = rows[-1]
+              f"{r['total_launches']} launches, {err}{wall}")
+    cont = rows[2]
     # gate the FUSED fraction: a refill only counts when its prefill chunk
     # verifiably shared a fused launch with decode attention
     assert cont["fused_mixed_fraction"] >= 0.8, (
@@ -308,6 +383,22 @@ def run(backend: str = "interpret", out_path: str | None = None) -> dict:
           f"{cont['fused_prefill_fraction']:.0%} of "
           f"{cont['prefill_chunks']} prefill chunks fused, admission "
           f"latency {cont['mean_admission_latency_steps']:.1f} steps")
+    sv = rows[3]
+    # epilogue stitching must be a STRICT win on the planner's own books:
+    # less predicted HBM traffic and a lower launch/roofline proxy, with
+    # (asserted above) bit-identical token streams
+    assert sv["stitched_chains"], "decode program contains no stitched chain"
+    assert (sv["predicted_hbm_bytes_stitched"]
+            < sv["predicted_hbm_bytes_unstitched"]), sv
+    assert sv["proxy_time_stitched_s"] < sv["proxy_time_unstitched_s"], sv
+    saved = (1 - sv["predicted_hbm_bytes_stitched"]
+             / sv["predicted_hbm_bytes_unstitched"])
+    print(f"# stitched: {', '.join(sv['stitched_chains'])} — "
+          f"{sv['total_launches']} launches vs "
+          f"{sv['unstitched_launches']} unstitched, {saved:.1%} less "
+          f"predicted HBM traffic, proxy "
+          f"{sv['proxy_time_stitched_s'] * 1e6:.1f}us vs "
+          f"{sv['proxy_time_unstitched_s'] * 1e6:.1f}us")
     report = {"backend": backend, "git_sha": git_sha(), "rows": rows}
     out = Path(out_path or f"BENCH_executed_{backend}_{report['git_sha']}.json")
     out.write_text(json.dumps(report, indent=1))

@@ -50,6 +50,16 @@ class OpSpec:
     shrink: Optional[Callable] = None      # factor -> OpSpec with smaller
     #                                        blocks (overrides shrink_blocks'
     #                                        structural rewrite)
+    # Epilogue contract (core/stitch.py): declaring ``epilogue=(consumer,
+    # operand)`` on a producer asserts its single output feeds EXACTLY that
+    # consumer's named operand and is dead afterwards — the planner may then
+    # contract the pair into one stitched chain whose intermediate never
+    # round-trips HBM.  ``chain`` marks an OpSpec that IS such a chain (the
+    # member names, producer first); ``extra_vmem_bytes`` accounts for the
+    # register/VMEM-resident intermediate the stitch keeps live per step.
+    epilogue: Optional[tuple[str, str]] = None
+    chain: tuple[str, ...] = ()
+    extra_vmem_bytes: int = 0
     # Stable operand signature (core/binding.py contract): one name per
     # input/output, positional order.  An op with names can be bound to live
     # arrays by the executor; unnamed operands are tuning-only.  A name may
@@ -73,8 +83,10 @@ class OpSpec:
     # ------------------------------------------------------------------
     @property
     def vmem_bytes(self) -> int:
-        """Per-step working set (single-buffered)."""
-        return sum(o.block_bytes() for o in (*self.inputs, *self.outputs))
+        """Per-step working set (single-buffered); a stitched chain's
+        resident intermediate rides in ``extra_vmem_bytes``."""
+        return (sum(o.block_bytes() for o in (*self.inputs, *self.outputs))
+                + self.extra_vmem_bytes)
 
     @property
     def arithmetic_intensity(self) -> float:

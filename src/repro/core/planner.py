@@ -25,7 +25,7 @@ import contextlib
 from dataclasses import dataclass
 from typing import Callable, Optional, Sequence
 
-from repro.core import autotuner, hfuse
+from repro.core import autotuner, hfuse, stitch
 from repro.core.cost_model import native_time
 from repro.core.op_spec import OpSpec
 from repro.core.schedule_cache import ScheduleCache
@@ -139,6 +139,77 @@ def _contracted_acyclic(ops: dict[str, GraphOp],
     return seen == n
 
 
+def _contract_chains(graph: Sequence[GraphOp]) -> tuple[GraphOp, ...]:
+    """Contract declared epilogue chains (``OpSpec.epilogue``) into single
+    stitched GraphOps — the vertical-fusion pre-pass that runs before any
+    horizontal packing.
+
+    A producer declaring ``epilogue=(consumer, operand)`` is contracted iff
+      * the consumer exists and is the producer's ONLY reader (the
+        intermediate really is dead after it — declaring the epilogue
+        asserts no binding glue needs it either),
+      * ``stitch.can_stitch`` accepts the pair (equal grids, per-step block
+        correspondence, collision-free merged signature),
+      * contracting it keeps the dependency graph acyclic (same
+        ``_contracted_acyclic`` check bundles pass — a chain is a 2-bundle
+        with a fixed internal order).
+    A pair that fails any check is simply left unstitched: the plan is
+    still valid, just without that vertical win.  Chains don't cascade
+    (one level); each op joins at most one chain.  The contracted graph is
+    what the rest of ``plan()`` sees — and what ``FusionPlan.graph``
+    records, so ``executor.compile_plan`` binds the chain's external
+    operands only."""
+    ops = {g.op.name: g for g in graph}
+    readers: dict[str, list[str]] = {n: [] for n in ops}
+    for g in graph:
+        for d in g.deps:
+            if d in readers:
+                readers[d].append(g.op.name)
+
+    pairs: list[tuple[str, str]] = []
+    taken: set[str] = set()
+    for g in graph:
+        if g.op.epilogue is None:
+            continue
+        pname = g.op.name
+        cname, operand = g.op.epilogue
+        if (cname not in ops or pname in taken or cname in taken
+                or readers[pname] != [cname]
+                or stitch.can_stitch(g.op, ops[cname].op, operand)
+                is not None
+                or not _contracted_acyclic(ops, pairs + [(pname, cname)])):
+            continue
+        pairs.append((pname, cname))
+        taken |= {pname, cname}
+    if not pairs:
+        return tuple(graph)
+
+    chainof: dict[str, str] = {}
+    chain_at: dict[str, GraphOp] = {}
+    for pname, cname in pairs:
+        p, c = ops[pname], ops[cname]
+        cop = stitch.stitch(p.op, c.op, p.op.epilogue[1])
+        chainof[pname] = chainof[cname] = cop.name
+        deps = (set(p.deps) | set(c.deps)) - {pname, cname}
+        chain_at[pname] = GraphOp(cop, frozenset(deps))
+
+    def mapdeps(ds: frozenset[str]) -> frozenset[str]:
+        return frozenset(chainof.get(d, d) for d in ds)
+
+    consumed = {c for _p, c in pairs}
+    out: list[GraphOp] = []
+    for g in graph:
+        n = g.op.name
+        if n in consumed:
+            continue
+        if n in chain_at:
+            ch = chain_at[n]
+            out.append(GraphOp(ch.op, mapdeps(ch.deps)))
+        else:
+            out.append(GraphOp(g.op, mapdeps(g.deps)))
+    return tuple(out)
+
+
 def _bundle_search(bundle: Sequence[OpSpec],
                    memo: dict[frozenset, autotuner.SearchResult],
                    cache: Optional[ScheduleCache]) -> autotuner.SearchResult:
@@ -198,13 +269,51 @@ def plan(graph: Sequence[GraphOp], *, min_gain_pct: float = 2.0,
     Main() loop) and a measured_speedup_pct vs the profiled native
     baseline.  ``cache``: persistent ScheduleCache — every search consults
     it first, so re-planning an unchanged graph performs zero new searches.
+
+    Declared epilogue chains (``OpSpec.epilogue``) are contracted into
+    single stitched members first — ``_contract_chains`` — so horizontal
+    packing runs over the vertically-fused graph.
     """
+    graph = _contract_chains(graph)
     ops = {g.op.name: g for g in graph}
     memo: dict[frozenset, autotuner.SearchResult] = {}
     batch = cache.batched() if cache is not None else contextlib.nullcontext()
     with batch:
         return _plan_inner(graph, ops, memo, min_gain_pct, allow_same_bound,
                            max_ways, measure, cache)
+
+
+def _starves_unseeded(graph, ops, clo, used: set[str],
+                      bundle: Sequence[OpSpec], x: OpSpec) -> bool:
+    """True iff absorbing ``x`` into ``bundle`` would leave some not-yet-
+    seeded memory-bound op with ZERO fusion partners.
+
+    Greedy growth is launch-hungry: a bundle happily swallows every
+    independent op whose native time it can amortize, even when a later
+    seed needed that op as its only partner.  The canonical case is the
+    serve decode graph with stitched chains: {decode_attn, chunk0} would
+    absorb chunk1 too, leaving the FFN chain (dependent on decode_attn, so
+    it can never join that bundle) alone — two launches where
+    {att, chunk0} + {ffn_chain, chunk1} is the same launch count with the
+    chain riding a fused launch.  The guard is purely structural (no cost
+    queries): it only fires when the starved op's partner pool would hit
+    zero, so homogeneous graphs (multi-tensor adamw piles, the paper
+    triples) grow exactly as before."""
+    names_now = {b.name for b in bundle}
+    taken = used | names_now | {x.name}
+    for g in graph:
+        mp = g.op
+        if mp.bound != "memory" or mp.name in taken:
+            continue
+        if _independent_of_all(clo, bundle, mp):
+            continue                  # mp can still join this very bundle
+        if not independent(ops, mp.name, x.name, clo):
+            continue                  # x was never a partner for mp
+        if not any(h.op.name not in taken and h.op.name != mp.name
+                   and independent(ops, mp.name, h.op.name, clo)
+                   for h in graph):
+            return True
+    return False
 
 
 def _plan_inner(graph, ops, memo, min_gain_pct, allow_same_bound, max_ways,
@@ -251,7 +360,9 @@ def _plan_inner(graph, ops, memo, min_gain_pct, allow_same_bound, max_ways,
                     and g.op.name not in names_now
                     and _independent_of_all(clo, bundle, g.op)
                     and _contracted_acyclic(
-                        ops, accepted + [names_now + (g.op.name,)])]
+                        ops, accepted + [names_now + (g.op.name,)])
+                    and not _starves_unseeded(graph, ops, clo, used,
+                                              bundle, g.op)]
             if not pool:
                 break
             scored = [(t_now + native_time(x)

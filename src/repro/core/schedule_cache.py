@@ -11,7 +11,7 @@ stale entry is simply never consulted again.  Bumping ``CACHE_VERSION``
 
 File format (JSON, human-inspectable):
 
-    {"version": 2,
+    {"version": 3,
      "entries": {"<sha256-prefix>": {
         "members": ["maxpool", "upsample", "sha_like"],
         "ratios": [2, 1, 4], "variant": 0, "vmem_cap": null,
@@ -42,7 +42,7 @@ import jax.numpy as jnp
 
 from repro.core.op_spec import OpSpec
 
-CACHE_VERSION = 2
+CACHE_VERSION = 3      # v3: bundle signatures carry chain structure
 
 _DEFAULT: Optional["ScheduleCache"] = None
 
@@ -58,8 +58,13 @@ def bundle_signature(ops: Sequence[OpSpec], *, vmem_budget: int,
                               jnp.dtype(o.dtype).name,
                               "x".join(map(str, o.block_shape)))
             for o in (*op.inputs, *op.outputs))
+        # a stitched chain (core/stitch.py) tunes differently from the
+        # unstitched op set — same operands, different traffic and VMEM
+        # residency — so the chain structure is part of the identity
+        chain = f"|c[{'>'.join(op.chain)}]+{int(op.extra_vmem_bytes)}" \
+            if op.chain else ""
         parts.append(f"{op.name}|g{op.grid}|f{op.flops:.6g}"
-                     f"|h{op.hbm_bytes:.6g}|{operands}")
+                     f"|h{op.hbm_bytes:.6g}|{operands}{chain}")
     return hashlib.sha256(";".join(parts).encode()).hexdigest()[:32]
 
 

@@ -74,9 +74,18 @@ def main(argv=None):
     ap.add_argument("--coresident-chunks", type=int, default=2,
                     help="prefill budget: max prefill chunks (distinct "
                          "slots) co-resident in one fused decode launch")
+    ap.add_argument("--prefill-policy", choices=["fifo", "srpf"],
+                    default="fifo",
+                    help="chunk-ordering under contention: fifo = claim "
+                         "order; srpf = shortest-remaining-prefill-first "
+                         "(PrefillBudget.policy)")
     ap.add_argument("--reject-overlong", action="store_true",
                     help="reject prompts longer than --chunk-rows instead "
                          "of admitting them across iterations")
+    ap.add_argument("--expect-stitched", action="store_true",
+                    help="fail unless the executed decode program carries "
+                         ">=1 epilogue chain (core/stitch.py) inside a "
+                         "fused launch — the CI hybrid-fusion smoke")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--plan-fusion", action="store_true",
                     help="plan the decode-step fusion bundle "
@@ -101,7 +110,8 @@ def main(argv=None):
         measure = make_measure(args.measure) if args.measure else None
         schedule_cache = default_cache()
     budget = PrefillBudget(chunk_rows=args.chunk_rows,
-                           max_coresident_chunks=args.coresident_chunks)
+                           max_coresident_chunks=args.coresident_chunks,
+                           policy=args.prefill_policy)
     engine = ServeEngine(cfg, params, batch=args.batch,
                          max_len=args.prompt_len + args.stagger
                          + args.max_new + 8,
@@ -118,6 +128,19 @@ def main(argv=None):
               + ("EXECUTES through the plan->program executor "
                  "(core/executor)" if engine.executed
                  else "falls back to the hand-wired path"))
+    if args.expect_stitched:
+        from repro.core.stitch import CHAIN_SEP
+        if not engine.executed:
+            raise SystemExit("[stitch] FAIL: decode step is not executed "
+                             "through the program executor")
+        prog = engine.build_decode_program(
+            prefill_chunks=args.coresident_chunks)
+        chains = sorted({m for ms in prog.fused_members for m in ms
+                         if CHAIN_SEP in m})
+        if not chains:
+            raise SystemExit("[stitch] FAIL: no epilogue chain in any "
+                             "fused launch of the decode program")
+        print(f"[stitch] chains in fused launches: {', '.join(chains)}")
     reqs = build_requests(cfg, args)
     t0 = time.time()
     engine.run(reqs)

@@ -79,15 +79,24 @@ class PrefillBudget:
     ``chunk_rows``: tokens of one prompt consumed per iteration (one
     prefill-attention chunk).  ``max_coresident_chunks``: how many chunks
     from *different* slots may ride one fused launch.  ``pad_to``: lane
-    tile the legacy wavefront prefill-FFN operand rows pad to."""
+    tile the legacy wavefront prefill-FFN operand rows pad to.
+    ``policy``: which prefilling slots chunk first when more are ready
+    than ``max_coresident_chunks`` allows — ``"fifo"`` (lowest slot index,
+    the legacy order) or ``"srpf"`` (shortest-remaining-prefill-first:
+    prompts closest to completion chunk first, cutting mean admission
+    latency on mixed short/long traces; ties break by slot index)."""
     chunk_rows: int = 2048
     max_coresident_chunks: int = 2
     pad_to: int = 128
+    policy: str = "fifo"
 
     def __post_init__(self):
         for f_ in ("chunk_rows", "max_coresident_chunks", "pad_to"):
             if getattr(self, f_) < 1:
                 raise ValueError(f"PrefillBudget.{f_} must be >= 1")
+        if self.policy not in ("fifo", "srpf"):
+            raise ValueError(
+                f"PrefillBudget.policy {self.policy!r} (fifo or srpf)")
 
     def pad_rows(self, rows: int) -> int:
         """Rows of a prefill FFN operand: raw up to one tile, the next
@@ -114,14 +123,15 @@ class ServeStats:
     decode_steps: int = 0         # iterations that decoded >= 1 active slot
     mixed_steps: int = 0          # decode iterations that also carried a
     #                               prefill chunk (the steady mixed graph)
-    fused_mixed_steps: int = 0    # mixed iterations whose program fused the
-    #                               prefill chunk with decode attention
+    fused_mixed_steps: int = 0    # mixed iterations whose program fused a
+    #                               prefill chunk with decode-side work
     prefill_only_steps: int = 0   # admissions with no active slot to decode
     slot_steps: int = 0           # sum of active slots over decode iterations
     tokens: int = 0
     prefill_chunks: int = 0       # chunk launches (chunked admission)
-    fused_prefill_chunks: int = 0  # chunks whose program fused them with
-    #                                decode attention
+    fused_prefill_chunks: int = 0  # chunks whose program fused them with a
+    #                                decode-side member (attention or the
+    #                                FFN chain riding the other bundle)
     admissions: list = field(default_factory=list)   # (step, rid, slot)
     retirements: list = field(default_factory=list)  # (step, rid, reason)
     admission_latencies: list = field(default_factory=list)  # steps from
@@ -139,8 +149,8 @@ class ServeStats:
 
     @property
     def fused_prefill_fraction(self) -> float:
-        """Fraction of prefill chunks that rode a fused launch with decode
-        attention (vs launching as planner singles)."""
+        """Fraction of prefill chunks that rode a fused launch with
+        decode-side work (vs launching as planner singles)."""
         return self.fused_prefill_chunks / max(self.prefill_chunks, 1)
 
     @property
@@ -224,7 +234,8 @@ class ServeEngine:
                  plan_fusion: bool = False, measure=None,
                  schedule_cache=None, scheduling: str = "continuous",
                  prefill_budget: Optional[PrefillBudget] = None,
-                 reject_overlong: bool = False):
+                 reject_overlong: bool = False,
+                 stitch_epilogues: bool = True):
         if scheduling not in ("continuous", "wavefront"):
             raise ValueError(f"scheduling {scheduling!r} "
                              "(continuous or wavefront)")
@@ -233,6 +244,10 @@ class ServeEngine:
         self.batch = batch
         self.max_len = max_len
         self.scheduling = scheduling
+        # stitch_epilogues=False keeps the decode graph's producer→consumer
+        # pairs as separate planner ops — the honest unstitched baseline the
+        # differential tests and benchmarks compare against
+        self.stitch_epilogues = stitch_epilogues
         self.prefill_budget = prefill_budget or PrefillBudget()
         self.reject_overlong = reject_overlong
         self.rng = jax.random.PRNGKey(rng_seed)
@@ -299,8 +314,17 @@ class ServeEngine:
         riding prompt's FFN in-projection matmul.  (``prefill_rows`` is the
         deprecated alias for it.)  With neither, the graph is a pure decode
         step: a dependency chain the planner correctly leaves unfused.
+
+        For executor-supported configs the graph carries the decode step's
+        epilogue chains (core/stitch.py): the pre-attention RMSNorm declares
+        the QKV projection matmul as its epilogue consumer, and the FFN
+        in-projection declares the activation — the planner contracts each
+        pair into one stitched member whose intermediate never touches HBM.
+        ``stitch_epilogues=False`` on the engine keeps the same six ops as
+        separate nodes (the unstitched baseline).
         """
         from repro.core import planner
+        from repro.kernels import elementwise
         from repro.kernels.decode_attention import decode_attention_op
         from repro.kernels.matmul import matmul_1d_op
         from repro.kernels.prefill_attention import prefill_attention_op
@@ -336,14 +360,46 @@ class ServeEngine:
         proj = matmul_1d_op(M=B, K=d, N=_ffn_in_width(cfg), dtype=dt, bm=B)
         proj = dataclasses.replace(
             proj, name="moe_router" if cfg.moe is not None else "ffn_proj")
-        # decode-step dataflow: norm1 -> attention -> norm2 -> router/FFN;
-        # proj reads the POST-attention hidden state, so it can never fuse
-        # with att — the only legal cross-stream partner is the prefill chunk
-        graph = [planner.GraphOp(norm1),
-                 planner.GraphOp(att, deps=frozenset({norm1.name})),
-                 planner.GraphOp(norm2, deps=frozenset({norm1.name,
-                                                        att.name})),
-                 planner.GraphOp(proj, deps=frozenset({norm2.name}))]
+        executable = executable_decode_supported(cfg) is None
+        if executable:
+            # Executor-supported configs plan the QKV projection and the FFN
+            # activation as graph ops (not binding glue), so each
+            # producer→consumer pair can stitch into one launch.  Stitched or
+            # not, the op set and numerics are identical — only the epilogue
+            # declarations below differ.
+            qkv = dataclasses.replace(
+                matmul_1d_op(M=B, K=d, N=(H + 2 * Hkv) * D, dtype=dt, bm=B),
+                name="qkv_proj")
+            act_fn = {"silu": elementwise.silu_gate,
+                      "gelu": elementwise.gelu_gate,
+                      "gelu_mlp": elementwise.gelu_plain,
+                      "relu2_mlp": elementwise.relu2}[cfg.activation]
+            act = elementwise.activation_op(
+                R=B, F_in=_ffn_in_width(cfg), F_out=cfg.d_ff, fn=act_fn,
+                dtype=dt, bm=B, name="decode_act")
+            if getattr(self, "stitch_epilogues", True):
+                norm1 = dataclasses.replace(norm1,
+                                            epilogue=(qkv.name, "x"))
+                proj = dataclasses.replace(proj,
+                                           epilogue=(act.name, "h"))
+            # precise single-reader dataflow: norm1 feeds ONLY qkv (att
+            # consumes the projected q/k/v, not the normed x), and proj
+            # feeds ONLY the activation — the contraction pre-pass checks
+            # exactly this
+            graph = [planner.GraphOp(norm1),
+                     planner.GraphOp(qkv, deps=frozenset({norm1.name})),
+                     planner.GraphOp(att, deps=frozenset({qkv.name})),
+                     planner.GraphOp(norm2, deps=frozenset({att.name})),
+                     planner.GraphOp(proj, deps=frozenset({norm2.name})),
+                     planner.GraphOp(act, deps=frozenset({proj.name}))]
+        else:
+            # fallback graph (MoE, stacked runs, ...): QKV/activation stay
+            # binding glue; dataflow norm1 -> attention -> norm2 -> proj
+            graph = [planner.GraphOp(norm1),
+                     planner.GraphOp(att, deps=frozenset({norm1.name})),
+                     planner.GraphOp(norm2, deps=frozenset({norm1.name,
+                                                            att.name})),
+                     planner.GraphOp(proj, deps=frozenset({norm2.name}))]
         if ffn_rows:
             # the wavefront co-prefill partner is a full-FFN-width matmul
             # (compute-bound at scale) — for MoE that is the expert FFN, not
@@ -413,7 +469,7 @@ class ServeEngine:
         wave position into it (see ``_wave_state``).  ``prefill_rows`` is
         the deprecated alias for ``ffn_rows``.
         """
-        from repro.core import executor, planner
+        from repro.core import executor, planner, stitch
         from repro.core.binding import BindingRegistry, Slot
         from repro.models import layers
 
@@ -442,9 +498,14 @@ class ServeEngine:
                             measure=self._measure,
                             cache=self._schedule_cache)
 
-        def norm1_put(state, y):
-            x1 = y[:, None, :].astype(dt)                       # (B, 1, d)
-            q, k, v = layers.qkv_project(cfg, {"w_qkv": state["w_qkv"]}, x1)
+        def qkv_put(state, qkv):
+            # the planned QKV matmul's output: split heads, RoPE at each
+            # slot's own position, act-masked cache scatter (mirrors
+            # layers.qkv_project's slicing exactly)
+            qkv = qkv.astype(dt)[:, None, :]                    # (B, 1, N)
+            q = qkv[..., :H * D].reshape(B, 1, H, D)
+            k = qkv[..., H * D:(H + Hkv) * D].reshape(B, 1, Hkv, D)
+            v = qkv[..., (H + Hkv) * D:].reshape(B, 1, Hkv, D)
             positions = state["pos"].reshape(B, 1)              # per-slot
             q = layers.rope(q, positions, cfg.rope_theta, cfg.rope_fraction)
             k = layers.rope(k, positions, cfg.rope_theta, cfg.rope_fraction)
@@ -469,15 +530,28 @@ class ServeEngine:
             state["h_mid"] = state["x"] + attn_out              # residual 1
             return state
 
-        def proj_put(state, h):
-            ff = _mlp_from_h(cfg, h.astype(dt), state["w_out"])
+        def act_put(state, h_act):
+            ff = h_act.astype(dt) @ state["w_out"]
             state = dict(state)
             state["x_out"] = state["h_mid"] + ff                # residual 2
             return state
 
+        # bindings follow the CONTRACTED graph: a stitched chain is one node
+        # exposing only external operands, so it binds once under its chain
+        # name; if the planner left a pair unstitched (or the engine was
+        # built with stitch_epilogues=False) each op binds separately with
+        # the intermediate routed through a named state slot
+        plan_names = {g.op.name for g in plan.graph}
         reg = BindingRegistry()
-        reg.bind("decode_norm1", x="x", scale="norm1_scale",
-                 outputs={"out": Slot(put=norm1_put)})
+        chain1 = stitch.chain_label("decode_norm1", "qkv_proj")
+        if chain1 in plan_names:
+            reg.bind(chain1, x="x", scale="norm1_scale", w="w_qkv",
+                     outputs={"out": Slot(put=qkv_put)})
+        else:
+            reg.bind("decode_norm1", x="x", scale="norm1_scale",
+                     outputs={"out": "x_normed"})
+            reg.bind("qkv_proj", x="x_normed", w="w_qkv",
+                     outputs={"out": Slot(put=qkv_put)})
         att_name = next(g.op.name for g in graph
                         if g.op.name.startswith("decode_attn"))
         reg.bind(att_name, q="q", k="k_cache", v="v_cache",
@@ -488,8 +562,15 @@ class ServeEngine:
         reg.bind("decode_norm2", x="h_mid", scale="norm2_scale",
                  outputs={"out": "h2"})
         proj_name = "moe_router" if cfg.moe is not None else "ffn_proj"
-        reg.bind(proj_name, x="h2", w="w_in",
-                 outputs={"out": Slot(put=proj_put)})
+        chain2 = stitch.chain_label(proj_name, "decode_act")
+        if chain2 in plan_names:
+            reg.bind(chain2, x="h2", w="w_in",
+                     outputs={"out": Slot(put=act_put)})
+        else:
+            reg.bind(proj_name, x="h2", w="w_in",
+                     outputs={"out": "h_ffn"})
+            reg.bind("decode_act", h="h_ffn",
+                     outputs={"out": Slot(put=act_put)})
         if ffn_rows:
             reg.bind("prefill_ffn", x="pf_h2", w="w_in", outputs={"out": "pf_ffn"})
         for g in graph:
@@ -725,10 +806,14 @@ class ServeEngine:
         n = n_chunks
         C = self.prefill_budget.effective_chunk(self._aligned_len())
         program = self.build_decode_program(prefill_chunks=n)
+        # a chunk counts as fused when it shares a launch with any
+        # decode-side member — decode attention OR the stitched FFN chain
+        # (with epilogue stitching the planner's second bundle pairs a chunk
+        # with ffn_proj→decode_act, which is just as much a mixed launch)
         self._cb_fused_chunks[n] = frozenset(
             i for i in range(n)
             if any(any(m.startswith(f"prefill_attn{i}_") for m in ms)
-                   and any(m.startswith("decode_attn") for m in ms)
+                   and any(not m.startswith("prefill_attn") for m in ms)
                    for ms in program.fused_members))
         self.cb_program_info[n] = {
             "fused_launches": program.n_fused,
@@ -954,9 +1039,17 @@ class ServeEngine:
                     req = arrived.pop(0)
                     waiting.remove(req)
                     reserved.append((b, req))
-            # chunk selection: lowest prefilling slot index first, capped
-            # by the budget's co-residency
+            # chunk selection, capped by the budget's co-residency.
+            # fifo: lowest prefilling slot index first (legacy order).
+            # srpf: shortest-remaining-prefill-first — the prompt with the
+            # fewest chunks left to consume goes first, so near-done
+            # requests admit (emit their first token) without queuing
+            # behind a long prompt's tail; slot index breaks ties, keeping
+            # the schedule deterministic.
             sel = [b for b in sorted(pref) if pref[b]["ready"] <= step_i]
+            if budget.policy == "srpf":
+                sel.sort(key=lambda b: (len(pref[b]["req"].prompt)
+                                        - pref[b]["done"], b))
             sel = sel[:budget.max_coresident_chunks]
             active = np.array([s is not None for s in slots])
             n_active = int(active.sum())

@@ -69,8 +69,13 @@ def update_graph(params, *, tokens: int = 4096, bm: int = 1024,
     """The optimizer-step op graph: one AdamW-update OpSpec per param leaf
     (stable operand signature: scalars/p/g/m/v -> p/m/v) and, with
     ``include_dW``, the backward dW matmul ``x^T @ g`` each 2-D parameter's
-    update *depends on* (an update can never fuse with the matmul producing
-    its gradient, but rides another tensor's).
+    update *depends on* (an update can never fuse *horizontally* with the
+    matmul producing its gradient, but rides another tensor's).  When the
+    dW output's row-major layout lines up exactly with the update's padded
+    (R, 128) gradient view, the dW op declares the update as its *epilogue*
+    (core/stitch.py) — the planner contracts the pair into one
+    ``dW_w→adamw_w`` member whose gradient never round-trips HBM, and that
+    chain still fuses horizontally with other tensors' updates.
 
     Returns ``(graph, layout)``: the planner graph plus the per-leaf layout
     ``[(name, path, n, R, bm_i), ...]`` the executor's pack/unpack uses —
@@ -79,7 +84,7 @@ def update_graph(params, *, tokens: int = 4096, bm: int = 1024,
     import math
 
     from repro.core import planner
-    from repro.kernels.adam import adamw_op
+    from repro.kernels.adam import LANES, adamw_op
     from repro.kernels.matmul import matmul_1d_op
 
     flat = jax.tree_util.tree_flatten_with_path(params)[0]
@@ -100,6 +105,17 @@ def update_graph(params, *, tokens: int = 4096, bm: int = 1024,
                                   bm=bmm)
                 dw = dataclasses.replace(dw, name=f"dW_{pname}",
                                          tag="train:dW")
+                if n % LANES == 0 and (bmm * d_out) % LANES == 0:
+                    # exact row-major correspondence: (d_in, d_out) flattens
+                    # to (n/128, 128) with no padding, and matching the
+                    # update's block rows to dW's block (bmm rows of d_out)
+                    # makes the two grids identical — can_stitch's
+                    # row-stream case, so dW can hand the update its
+                    # gradient block in-register
+                    bm_i = bmm * d_out // LANES
+                    R = n // LANES
+                    dw = dataclasses.replace(
+                        dw, epilogue=(f"adamw_{pname}", "g"))
                 graph.append(planner.GraphOp(dw))
                 deps = frozenset({dw.name})
         upd = adamw_op(R=R, dtype=leaf.dtype, bm=bm_i, name=f"adamw_{pname}",

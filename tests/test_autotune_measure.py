@@ -345,17 +345,32 @@ def test_fusion_plan_summary_uniform_schema():
 # train/serve wiring
 # ---------------------------------------------------------------------------
 def test_train_loop_plans_optimizer_backward_overlap():
+    from repro.core.stitch import CHAIN_SEP
     from repro.train.train_loop import plan_update_fusion
     params = {
         "wqkv": jax.ShapeDtypeStruct((2048, 2048), jax.numpy.bfloat16),
         "wff": jax.ShapeDtypeStruct((2048, 8192), jax.numpy.bfloat16),
-        "bias": jax.ShapeDtypeStruct((8192,), jax.numpy.bfloat16),
+        # an embedding-scale 1-D leaf: the memory-bound seed whose update
+        # hides behind another tensor's compute-bound backward chain
+        "embed": jax.ShapeDtypeStruct((4194304,), jax.numpy.bfloat16),
     }
     plan = plan_update_fusion(params, tokens=4096, max_ways=3)
+    # each 2-D tensor's dW matmul stitched its OWN update as an epilogue
+    # (the gradient never round-trips HBM) ...
+    members = [m for d in plan.fused for m in d.members] + list(plan.singles)
+    assert f"dW_wqkv{CHAIN_SEP}adamw_wqkv" in members
+    assert f"dW_wff{CHAIN_SEP}adamw_wff" in members
+    # ... and the horizontal overlap still happens ON TOP: the embedding's
+    # memory-bound update rides a stitched backward chain
     assert plan.fused, "optimizer/backward overlap found no bundle"
+    assert any(any(CHAIN_SEP in m for m in d.members)
+               and any(CHAIN_SEP not in m for m in d.members)
+               for d in plan.fused), \
+        "no bundle mixes a stitched chain with a plain update"
     for d in plan.fused:
         names = set(d.members)
-        # an update never fuses with the dW matmul that produces its grad
+        # an update never fuses HORIZONTALLY with the dW matmul producing
+        # its grad — that pairing is the vertical stitch, one member
         for n in names:
             if n.startswith("adamw_"):
                 assert f"dW_{n.removeprefix('adamw_')}" not in names

@@ -5,8 +5,9 @@ Differential contract: with a small ``chunk_rows`` budget, prompts spanning
 1, 2, and 5+ chunks are chipped away across iterations and the executed
 engine stays token-for-token identical to the wavefront oracle (which
 prefills whole prompts in one shot) — including mid-batch EOS retirement.
-Structural contract: ``Program.fused_members`` shows >= 2 prefill chunks
-co-resident with decode attention in ONE fused launch.  Plus: the kernel's
+Structural contract: ``Program.fused_members`` shows every prefill chunk
+co-resident with decode-side work — one with decode attention, one with the
+stitched ``ffn_proj→decode_act`` epilogue chain.  Plus: the kernel's
 online-softmax numerics vs a dense jnp reference at nonzero chunk offsets,
 ``reject_overlong=True`` restoring the legacy admission contract, and
 DeprecationWarnings on the prefill_rows/prefill_chunk/pad_prefill_rows
@@ -21,6 +22,7 @@ import pytest
 
 from repro.configs import get_config
 from repro.core import hfuse
+from repro.core.stitch import CHAIN_SEP
 from repro.kernels.prefill_attention import prefill_attention_op
 from repro.models import lm
 from repro.serve.engine import (PrefillBudget, Request, ServeEngine,
@@ -68,6 +70,35 @@ def test_budget_validates():
                 dict(pad_to=-1)):
         with pytest.raises(ValueError, match="must be >= 1"):
             PrefillBudget(**bad)
+    with pytest.raises(ValueError, match="policy"):
+        PrefillBudget(policy="lifo")
+
+
+def test_srpf_policy_lowers_admission_latency(setup):
+    """Shortest-remaining-prefill-first: with one chunk of budget per step
+    and a short prompt queued behind a long one, FIFO makes the short
+    prompt wait out the long prefill's tail; SRPF admits it first.  Token
+    streams stay identical to the wavefront oracle either way."""
+    cfg, params, wave, _chunked = setup
+    lens, buds = (41, 6), (3, 3)          # 6-chunk prompt, then a 1-chunk
+    ref = _requests(cfg, lens, buds)
+    wave.run(ref)
+    stats = {}
+    for policy in ("fifo", "srpf"):
+        eng = ServeEngine(
+            cfg, params, batch=2, max_len=48, scheduling="continuous",
+            plan_fusion=True,
+            prefill_budget=dataclasses.replace(
+                BUDGET, max_coresident_chunks=1, policy=policy))
+        rs = _requests(cfg, lens, buds)
+        eng.run(rs)
+        assert [r.out_tokens for r in rs] == [r.out_tokens for r in ref], \
+            f"{policy} diverged from the wavefront oracle"
+        stats[policy] = eng.stats
+    assert (stats["srpf"].mean_admission_latency
+            < stats["fifo"].mean_admission_latency), (
+        stats["srpf"].admission_latencies,
+        stats["fifo"].admission_latencies)
 
 
 def test_budget_effective_chunk_divides_cache():
@@ -141,17 +172,27 @@ def test_prefill_op_shrinks_blockwise():
 
 
 # ---------------------------------------------------------------------------
-# Structural: N prefill chunks + decode attention in ONE fused launch
+# Structural: the hybrid mixed-iteration program — every prefill chunk rides
+# a fused launch with decode-side work, and one of those partners is a
+# stitched epilogue chain (vertical fusion INSIDE the horizontal bundle)
 # ---------------------------------------------------------------------------
-def test_program_fuses_two_chunks_with_decode_attention(setup):
+def test_program_fuses_chunks_with_decode_side_work(setup):
     _cfg_, _params, _wave, chunked = setup
     prog = chunked.build_decode_program(prefill_chunks=2)
     fused = prog.fused_members
-    assert any(
-        sum(m.startswith("prefill_attn") for m in ms) >= 2
-        and any(m.startswith("decode_attn") for m in ms)
-        for ms in fused), \
-        f"no fused launch co-residing 2 prefill chunks with decode: {fused}"
+    mixed = [ms for ms in fused
+             if any(m.startswith("prefill_attn") for m in ms)
+             and any(not m.startswith("prefill_attn") for m in ms)]
+    # both chunks co-reside with decode-side work
+    chunks_fused = {m for ms in mixed for m in ms
+                    if m.startswith("prefill_attn")}
+    assert len(chunks_fused) == 2, f"chunk not fused with decode: {fused}"
+    # decode attention carries a chunk (the paper's heterogeneous pairing)
+    assert any(any(m.startswith("decode_attn") for m in ms)
+               for ms in mixed), f"decode attention rides alone: {fused}"
+    # and a stitched producer→consumer chain rides a mixed launch too
+    assert any(any(CHAIN_SEP in m for m in ms) for ms in mixed), \
+        f"no stitched chain inside a mixed launch: {fused}"
 
 
 # ---------------------------------------------------------------------------
