@@ -7,6 +7,17 @@ compute-bound matmuls in the dual-stream decode mode (serve/dual_stream.py).
 Fusible form: 1-D grid over (batch, kv-chunk) linearized; the online-softmax
 (m, l) carries live in small fp32 *outputs* with constant index maps (not
 scratch) so the op composes under core/hfuse.generate.
+
+Paged form (``block_table=(num_blocks, block_size)``): the k/v operands are
+a flat block arena ``(num_blocks, block_size, Hkv, D)`` shared by every
+slot, and a per-slot block table rides as one more small int32 operand
+("bt", ``(B, max_blocks)``, fetched batch-major like "len").  Each kv-chunk
+step gathers its ``ck // block_size`` pages from the arena by table lookup
+— the memory-intensive indirection the serve engine pairs with
+compute-bound GEMMs in one fused launch (serve/kv_pool.py owns the arena).
+The page gather reassembles exactly the contiguous kernel's ``(ck, Hkv,
+D)`` block, so paged and contiguous attention are BITWISE equal for equal
+logical cache content (tests/test_kv_paged_attention.py).
 """
 from __future__ import annotations
 
@@ -16,14 +27,24 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.core.op_spec import OpSpec, Operand
+from repro.core.op_spec import MIN_BLOCK_ROWS, OpSpec, Operand
 
 NEG_INF = -1e30
 
 
+def gather_pages(ref, bt, first_page: int, npages: int):
+    """Assemble one (npages * block_size, ...) kv-chunk from the arena
+    ``ref`` by looking pages ``bt[first_page : first_page + npages]`` up in
+    the (already loaded) block-table row ``bt``.  ``first_page`` may be a
+    traced scalar; ``npages`` is static."""
+    pages = [ref[pl.ds(bt[first_page + p], 1)][0] for p in range(npages)]
+    return pages[0] if npages == 1 else jnp.concatenate(pages, axis=0)
+
+
 def decode_attention_op(B: int, S: int, H: int, Hkv: int, D: int,
                         dtype=jnp.bfloat16, ck: int = 1024,
-                        length=None, dynamic_length: bool = False) -> OpSpec:
+                        length=None, dynamic_length: bool = False,
+                        block_table=None) -> OpSpec:
     """q: (B,H,D); cache k,v: (B,S,Hkv,D); out o: (B,H,D) fp32.
 
     Grid: B * (S // ck) steps, batch-major.  `length` (static) masks the
@@ -34,6 +55,15 @@ def decode_attention_op(B: int, S: int, H: int, Hkv: int, D: int,
     slot independently — the form the executor binds to a live per-slot
     ``pos + 1`` vector (continuous batching: slots advance, finish and
     refill at unrelated cache positions within one launch).
+
+    ``block_table=(num_blocks, block_size)`` switches to the paged form:
+    k/v become the shared ``(num_blocks, block_size, Hkv, D)`` arena
+    (constant index map — the gather is in-body, since fused index maps are
+    pure functions of the grid step), ``S`` becomes the per-slot LOGICAL
+    capacity (``max_blocks = S // block_size`` table columns), and a
+    ``(B, max_blocks)`` int32 operand ("bt") fetched batch-major maps each
+    slot's logical pages to arena blocks.  Requires ``ck % block_size == 0``
+    so every kv-chunk is a whole number of pages.
     """
     assert S % ck == 0 and H % Hkv == 0
     assert not (dynamic_length and length is not None)
@@ -41,8 +71,15 @@ def decode_attention_op(B: int, S: int, H: int, Hkv: int, D: int,
     rep = H // Hkv
     scale = 1.0 / math.sqrt(D)
     valid_len = S if length is None else int(length)
+    if block_table is not None:
+        num_blocks, bs = block_table
+        assert ck % bs == 0 and S % bs == 0
+        max_blocks = S // bs
+        npc = ck // bs                       # pages per kv-chunk
 
     def body(step, *refs):
+        if block_table is not None:
+            bt_ref, refs = refs[0], refs[1:]
         if dynamic_length:
             len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref = refs
             cur_len = len_ref[0, 0]
@@ -58,8 +95,13 @@ def decode_attention_op(B: int, S: int, H: int, Hkv: int, D: int,
             o_ref[...] = jnp.zeros_like(o_ref)
 
         q = q_ref[0].astype(jnp.float32) * scale          # (H, D)
-        k = k_ref[0].astype(jnp.float32)                  # (ck, Hkv, D)
-        v = v_ref[0].astype(jnp.float32)
+        if block_table is not None:
+            bt = bt_ref[0]                                # (max_blocks,)
+            k = gather_pages(k_ref, bt, j * npc, npc).astype(jnp.float32)
+            v = gather_pages(v_ref, bt, j * npc, npc).astype(jnp.float32)
+        else:
+            k = k_ref[0].astype(jnp.float32)              # (ck, Hkv, D)
+            v = v_ref[0].astype(jnp.float32)
         qg = q.reshape(Hkv, rep, D)
         s = jnp.einsum("hrd,khd->hrk", qg, k)             # (Hkv, rep, ck)
         kpos = j * ck + jax.lax.broadcasted_iota(jnp.int32, (Hkv, rep, ck), 2)
@@ -80,14 +122,35 @@ def decode_attention_op(B: int, S: int, H: int, Hkv: int, D: int,
     itemsize = jnp.dtype(dtype).itemsize
     len_in = ((Operand((B, 1), jnp.int32, (1, 1), lambda s: (s // nk, 0)),)
               if dynamic_length else ())
+    if block_table is not None:
+        bt_in = (Operand((B, max_blocks), jnp.int32, (1, max_blocks),
+                         lambda s: (s // nk, 0)),)
+        kv = (Operand((num_blocks, bs, Hkv, D), dtype,
+                      (num_blocks, bs, Hkv, D), lambda s: (0, 0, 0, 0)),
+              Operand((num_blocks, bs, Hkv, D), dtype,
+                      (num_blocks, bs, Hkv, D), lambda s: (0, 0, 0, 0)))
+        suffix, bt_name = f"_pg{bs}", ("bt",)
+
+        def shrink(factor: int):
+            sck = ck // factor
+            if ck % factor or sck % bs or sck < MIN_BLOCK_ROWS:
+                return None
+            return decode_attention_op(B, S, H, Hkv, D, dtype=dtype, ck=sck,
+                                       length=length,
+                                       dynamic_length=dynamic_length,
+                                       block_table=block_table)
+    else:
+        kv = (Operand((B, S, Hkv, D), dtype, (1, ck, Hkv, D),
+                      lambda s: (s // nk, s % nk, 0, 0)),
+              Operand((B, S, Hkv, D), dtype, (1, ck, Hkv, D),
+                      lambda s: (s // nk, s % nk, 0, 0)))
+        bt_in, suffix, bt_name, shrink = (), "", (), None
     return OpSpec(
-        name=f"decode_attn_B{B}_S{S}_H{H}kv{Hkv}", grid=B * nk, body=body,
-        inputs=len_in
-        + (Operand((B, H, D), dtype, (1, H, D), lambda s: (s // nk, 0, 0)),
-           Operand((B, S, Hkv, D), dtype, (1, ck, Hkv, D),
-                   lambda s: (s // nk, s % nk, 0, 0)),
-           Operand((B, S, Hkv, D), dtype, (1, ck, Hkv, D),
-                   lambda s: (s // nk, s % nk, 0, 0))),
+        name=f"decode_attn_B{B}_S{S}_H{H}kv{Hkv}{suffix}",
+        grid=B * nk, body=body,
+        inputs=bt_in + len_in
+        + (Operand((B, H, D), dtype, (1, H, D), lambda s: (s // nk, 0, 0)),)
+        + kv,
         outputs=(Operand((B, H, D), jnp.float32, (1, H, D),
                          lambda s: (s // nk, 0, 0)),
                  Operand((B, H, 1), jnp.float32, (1, H, 1),
@@ -97,6 +160,8 @@ def decode_attention_op(B: int, S: int, H: int, Hkv: int, D: int,
         flops=2.0 * B * H * valid_len * D * 2,
         hbm_bytes=2.0 * B * valid_len * Hkv * D * itemsize
         + 2.0 * B * H * D * itemsize,
+        shrink=shrink,
         tag="framework:decode_attention",
-        in_names=(("len",) if dynamic_length else ()) + ("q", "k", "v"),
+        in_names=bt_name + (("len",) if dynamic_length else ())
+        + ("q", "k", "v"),
         out_names=("o", "m", "l"))

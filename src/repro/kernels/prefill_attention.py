@@ -32,13 +32,15 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core.op_spec import MIN_BLOCK_ROWS, OpSpec, Operand
+from repro.kernels.decode_attention import gather_pages
 
 NEG_INF = -1e30
 
 
 def prefill_attention_op(C: int, S: int, H: int, Hkv: int, D: int,
                          dtype=jnp.bfloat16, ck: int = 1024,
-                         name: str | None = None) -> OpSpec:
+                         name: str | None = None,
+                         block_table=None) -> OpSpec:
     """q: (C,H,D) one chunk of one slot; cache k,v: (S,Hkv,D); off: (1,1)
     int32 absolute start position of the chunk; out o: (C,H,D) fp32.
 
@@ -52,14 +54,32 @@ def prefill_attention_op(C: int, S: int, H: int, Hkv: int, D: int,
     proportionally larger grid) rather than ``op_spec.shrink_blocks`` — the
     body closes over the kv-chunk count, so a structural block rewrite
     would silently break the online-softmax recurrence.
+
+    ``block_table=(num_blocks, block_size)``: paged form, mirroring
+    kernels/decode_attention.py — k/v are the shared arena, ``S`` is the
+    slot's logical capacity, and a ``(1, max_blocks)`` int32 operand ("bt",
+    this slot's table row, constant across the grid like "off") maps
+    logical pages to arena blocks for the in-body gather.  The reassembled
+    ``(ck, Hkv, D)`` block feeds math identical to the contiguous body, so
+    both forms are bitwise-equal on equal logical cache content.
     """
     assert S % ck == 0 and H % Hkv == 0
     nk = S // ck
     rep = H // Hkv
     scale = 1.0 / math.sqrt(D)
-    resolved = name or f"prefill_attn_C{C}_S{S}_H{H}kv{Hkv}"
+    paged = block_table is not None
+    if paged:
+        num_blocks, bs = block_table
+        assert ck % bs == 0 and S % bs == 0
+        max_blocks = S // bs
+        npc = ck // bs                       # pages per kv-chunk
+    resolved = name or (f"prefill_attn_C{C}_S{S}_H{H}kv{Hkv}"
+                        + (f"_pg{bs}" if paged else ""))
 
-    def body(step, off_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref):
+    def body(step, off_ref, *refs):
+        if paged:
+            bt_ref, refs = refs[0], refs[1:]
+        q_ref, k_ref, v_ref, o_ref, m_ref, l_ref = refs
         j = step                                           # kv-chunk index
 
         @pl.when(j == 0)
@@ -70,8 +90,13 @@ def prefill_attention_op(C: int, S: int, H: int, Hkv: int, D: int,
 
         off = off_ref[0, 0]
         q = q_ref[...].astype(jnp.float32) * scale         # (C, H, D)
-        k = k_ref[...].astype(jnp.float32)                 # (ck, Hkv, D)
-        v = v_ref[...].astype(jnp.float32)
+        if paged:
+            bt = bt_ref[0]                                 # (max_blocks,)
+            k = gather_pages(k_ref, bt, j * npc, npc).astype(jnp.float32)
+            v = gather_pages(v_ref, bt, j * npc, npc).astype(jnp.float32)
+        else:
+            k = k_ref[...].astype(jnp.float32)             # (ck, Hkv, D)
+            v = v_ref[...].astype(jnp.float32)
         qg = q.reshape(C, Hkv, rep, D)
         s = jnp.einsum("chrd,khd->chrk", qg, k)            # (C, Hkv, rep, ck)
         kpos = j * ck + jax.lax.broadcasted_iota(jnp.int32,
@@ -94,20 +119,35 @@ def prefill_attention_op(C: int, S: int, H: int, Hkv: int, D: int,
             o_ref[...] = o_ref[...] / jnp.maximum(l_ref[...], 1e-30)
 
     def shrink(factor: int):
-        if ck % factor or ck // factor < MIN_BLOCK_ROWS:
+        sck = ck // factor
+        if ck % factor or sck < MIN_BLOCK_ROWS or (paged and sck % bs):
             return None
         return prefill_attention_op(C, S, H, Hkv, D, dtype=dtype,
-                                    ck=ck // factor, name=resolved)
+                                    ck=sck, name=resolved,
+                                    block_table=block_table)
+
+    if paged:
+        bt_in = (Operand((1, max_blocks), jnp.int32, (1, max_blocks),
+                         lambda s: (0, 0)),)
+        kv = (Operand((num_blocks, bs, Hkv, D), dtype,
+                      (num_blocks, bs, Hkv, D), lambda s: (0, 0, 0, 0)),
+              Operand((num_blocks, bs, Hkv, D), dtype,
+                      (num_blocks, bs, Hkv, D), lambda s: (0, 0, 0, 0)))
+        bt_name = ("bt",)
+    else:
+        kv = (Operand((S, Hkv, D), dtype, (ck, Hkv, D),
+                      lambda s: (s, 0, 0)),
+              Operand((S, Hkv, D), dtype, (ck, Hkv, D),
+                      lambda s: (s, 0, 0)))
+        bt_in, bt_name = (), ()
 
     itemsize = jnp.dtype(dtype).itemsize
     return OpSpec(
         name=resolved, grid=nk, body=body,
-        inputs=(Operand((1, 1), jnp.int32, (1, 1), lambda s: (0, 0)),
-                Operand((C, H, D), dtype, (C, H, D), lambda s: (0, 0, 0)),
-                Operand((S, Hkv, D), dtype, (ck, Hkv, D),
-                        lambda s: (s, 0, 0)),
-                Operand((S, Hkv, D), dtype, (ck, Hkv, D),
-                        lambda s: (s, 0, 0))),
+        inputs=(Operand((1, 1), jnp.int32, (1, 1), lambda s: (0, 0)),)
+        + bt_in
+        + (Operand((C, H, D), dtype, (C, H, D), lambda s: (0, 0, 0)),)
+        + kv,
         outputs=(Operand((C, H, D), jnp.float32, (C, H, D),
                          lambda s: (0, 0, 0)),
                  Operand((C, H, 1), jnp.float32, (C, H, 1),
@@ -119,5 +159,5 @@ def prefill_attention_op(C: int, S: int, H: int, Hkv: int, D: int,
         + C * H * D * (itemsize + 4.0) + 4.0 * C * H * 2,
         shrink=shrink,
         tag="framework:prefill_attention",
-        in_names=("off", "q", "k", "v"),
+        in_names=("off",) + bt_name + ("q", "k", "v"),
         out_names=("o", "m", "l"))

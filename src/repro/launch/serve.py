@@ -32,13 +32,21 @@ def build_requests(cfg, args) -> list[Request]:
     if args.arrival_rate > 0:
         arrivals = np.floor(np.cumsum(
             rng.exponential(1.0 / args.arrival_rate, args.requests)))
+    shared = None
+    if args.shared_prefix > 0:
+        # one prefix drawn ONCE, common to every request — the paged-KV
+        # prefix cache serves it from shared blocks after the first prompt
+        shared = rng.integers(0, cfg.vocab_size,
+                              args.shared_prefix).astype(np.int32)
     reqs = []
     for i in range(args.requests):
         spread = i % max(1, args.stagger)
         plen = args.prompt_len + spread
+        tail = rng.integers(0, cfg.vocab_size, plen).astype(np.int32)
+        prompt = tail if shared is None else np.concatenate([shared, tail])
         reqs.append(Request(
             rid=i,
-            prompt=rng.integers(0, cfg.vocab_size, plen).astype(np.int32),
+            prompt=prompt,
             max_new_tokens=max(1, args.max_new - spread),
             temperature=args.temperature,
             arrival=int(arrivals[i])))
@@ -86,6 +94,28 @@ def main(argv=None):
                     help="fail unless the executed decode program carries "
                          ">=1 epilogue chain (core/stitch.py) inside a "
                          "fused launch — the CI hybrid-fusion smoke")
+    ap.add_argument("--kv-block-size", type=int, default=0,
+                    help="paged KV: arena block size in tokens (0 = "
+                         "contiguous per-slot cache; >0 enables the "
+                         "KVPool paged path, requires --plan-fusion)")
+    ap.add_argument("--kv-blocks", type=int, default=None,
+                    help="paged KV: total arena blocks including per-slot "
+                         "sentinels (default: batch slots' worth + slack)")
+    ap.add_argument("--kv-slot-blocks", type=int, default=None,
+                    help="paged KV: table columns per slot — the logical "
+                         "capacity kv_slot_blocks * kv_block_size replaces "
+                         "max_len as the length ceiling")
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="prepend one shared N-token prefix to every "
+                         "prompt: exercises the prefix cache (later "
+                         "requests skip those chunks' prefill)")
+    ap.add_argument("--expect-prefix-hits", action="store_true",
+                    help="fail unless the prefix cache served >=1 request "
+                         "from shared blocks (stats.prefix_hit_rate > 0) — "
+                         "the CI paged-serve smoke")
+    ap.add_argument("--kv-snapshot", default=None, metavar="PATH",
+                    help="write the final KVPool snapshot as JSON "
+                         "(inspect with: python -m repro.tools kv-inspect)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--plan-fusion", action="store_true",
                     help="plan the decode-step fusion bundle "
@@ -97,6 +127,14 @@ def main(argv=None):
     args = ap.parse_args(argv)
     if args.measure and not args.plan_fusion:
         ap.error("--measure only applies to --plan-fusion schedule selection")
+    if args.kv_block_size > 0 and not args.plan_fusion:
+        ap.error("--kv-block-size requires --plan-fusion (paged KV runs "
+                 "only on the executed continuous path)")
+    if args.kv_block_size <= 0 and (
+            args.kv_blocks is not None or args.kv_slot_blocks is not None
+            or args.expect_prefix_hits or args.kv_snapshot):
+        ap.error("--kv-blocks/--kv-slot-blocks/--expect-prefix-hits/"
+                 "--kv-snapshot require --kv-block-size > 0")
 
     cfg = get_config(args.arch)
     if args.scale == "smoke":
@@ -113,13 +151,17 @@ def main(argv=None):
                            max_coresident_chunks=args.coresident_chunks,
                            policy=args.prefill_policy)
     engine = ServeEngine(cfg, params, batch=args.batch,
-                         max_len=args.prompt_len + args.stagger
-                         + args.max_new + 8,
+                         max_len=args.prompt_len + args.shared_prefix
+                         + args.stagger + args.max_new + 8,
                          plan_fusion=args.plan_fusion, measure=measure,
                          schedule_cache=schedule_cache,
                          scheduling=args.scheduling,
                          prefill_budget=budget,
-                         reject_overlong=args.reject_overlong)
+                         reject_overlong=args.reject_overlong,
+                         paged_kv=args.kv_block_size > 0,
+                         kv_block_size=args.kv_block_size or 16,
+                         kv_blocks=args.kv_blocks,
+                         kv_slot_blocks=args.kv_slot_blocks)
     if engine.fusion_plan is not None:
         print("[plan-fusion] decode-step bundles:")
         for row in engine.fusion_plan.summary():
@@ -158,6 +200,24 @@ def main(argv=None):
               f"{st.fused_prefill_fraction:.0%} in a fused launch; "
               f"mean admission latency "
               f"{st.mean_admission_latency:.1f} steps")
+        if args.kv_block_size > 0:
+            print(f"[paged-kv] block_size {engine.kv_block_size}, peak "
+                  f"{st.blocks_in_use} blocks in use, "
+                  f"prefix_hit_rate {st.prefix_hit_rate:.0%} "
+                  f"({st.prefix_hits} hits, {st.prefix_tokens_reused} "
+                  f"tokens reused), {st.evictions} evictions")
+    if args.kv_snapshot:
+        import json
+        snap = engine.kv_pool.snapshot()
+        with open(args.kv_snapshot, "w") as fh:
+            json.dump(snap, fh, indent=2)
+        print(f"[paged-kv] pool snapshot -> {args.kv_snapshot}")
+    if args.expect_prefix_hits:
+        if engine.stats.prefix_hit_rate <= 0:
+            raise SystemExit("[paged-kv] FAIL: no request was served from "
+                             "shared prefix blocks (prefix_hit_rate == 0)")
+        print(f"[paged-kv] prefix cache hit "
+              f"{engine.stats.prefix_hits} request(s)")
     for r in reqs[:3]:
         print(f"  req {r.rid}: {r.out_tokens}")
 

@@ -104,15 +104,34 @@ class PrefillBudget:
         return rows if rows <= self.pad_to else \
             -(-rows // self.pad_to) * self.pad_to
 
-    def effective_chunk(self, cache_len: int) -> int:
+    def effective_chunk(self, cache_len: int, multiple: int = 1) -> int:
         """Chunk rows actually used against a ``cache_len`` cache: the
         largest value <= min(chunk_rows, cache_len) dividing cache_len, so
         chunk offsets are always multiples of the chunk and a full-chunk
-        scatter never crosses the cache end."""
-        c = min(self.chunk_rows, cache_len)
-        while cache_len % c:
-            c -= 1
-        return c
+        scatter never crosses the cache end.  ``multiple`` further
+        constrains the chunk to a multiple of it (the paged path passes the
+        KV block size so every chunk is a whole number of pages); when even
+        ``multiple`` itself exceeds ``chunk_rows`` it is returned as the
+        minimum viable chunk.
+
+        Direct divisor enumeration over ``sqrt(cache_len)`` pairs — the
+        answer is by definition a divisor, so counting down from
+        ``chunk_rows`` one integer at a time (the old loop) did O(cache_len)
+        work for what is an O(sqrt) question.
+        """
+        if cache_len % multiple:
+            raise ValueError(f"cache_len {cache_len} is not a multiple of "
+                             f"the required alignment {multiple}")
+        n = cache_len // multiple
+        cap = max(min(self.chunk_rows, cache_len) // multiple, 1)
+        best, i = 1, 1
+        while i * i <= n:
+            if n % i == 0:
+                for d in (i, n // i):
+                    if best < d <= cap:
+                        best = d
+            i += 1
+        return best * multiple
 
 
 @dataclass
@@ -136,6 +155,12 @@ class ServeStats:
     retirements: list = field(default_factory=list)  # (step, rid, reason)
     admission_latencies: list = field(default_factory=list)  # steps from
     #                                  arrival to first token, per admission
+    # paged-KV trajectory (serve/kv_pool.py; zero on the contiguous path)
+    prompt_tokens: int = 0        # prompt tokens across admitted requests
+    prefix_hits: int = 0          # admissions that matched a cached prefix
+    prefix_tokens_reused: int = 0  # prompt tokens whose prefill was skipped
+    blocks_in_use: int = 0        # peak arena blocks mapped or cached
+    evictions: int = 0            # prefix-cache blocks evicted under pressure
 
     @property
     def occupancy(self) -> float:
@@ -159,6 +184,12 @@ class ServeStats:
         lat = self.admission_latencies
         return sum(lat) / len(lat) if lat else 0.0
 
+    @property
+    def prefix_hit_rate(self) -> float:
+        """Fraction of prompt tokens whose prefill the prefix cache
+        skipped entirely (paged KV only)."""
+        return self.prefix_tokens_reused / max(self.prompt_tokens, 1)
+
     def describe(self) -> dict:
         return {
             "steps": self.steps, "decode_steps": self.decode_steps,
@@ -172,6 +203,10 @@ class ServeStats:
             "mixed_fraction": round(self.mixed_fraction, 3),
             "fused_prefill_fraction": round(self.fused_prefill_fraction, 3),
             "mean_admission_latency": round(self.mean_admission_latency, 3),
+            "prefix_hits": self.prefix_hits,
+            "prefix_hit_rate": round(self.prefix_hit_rate, 3),
+            "blocks_in_use": self.blocks_in_use,
+            "evictions": self.evictions,
         }
 
 
@@ -235,7 +270,10 @@ class ServeEngine:
                  schedule_cache=None, scheduling: str = "continuous",
                  prefill_budget: Optional[PrefillBudget] = None,
                  reject_overlong: bool = False,
-                 stitch_epilogues: bool = True):
+                 stitch_epilogues: bool = True,
+                 paged_kv: bool = False, kv_block_size: int = 16,
+                 kv_slot_blocks: Optional[int] = None,
+                 kv_blocks: Optional[int] = None):
         if scheduling not in ("continuous", "wavefront"):
             raise ValueError(f"scheduling {scheduling!r} "
                              "(continuous or wavefront)")
@@ -244,6 +282,46 @@ class ServeEngine:
         self.batch = batch
         self.max_len = max_len
         self.scheduling = scheduling
+        self.paged_kv = paged_kv
+        self.kv_pool = None
+        if paged_kv:
+            # paged KV rides the executed chunked path: the arena gather
+            # lives in the paged kernels, the table bookkeeping in
+            # serve/kv_pool.py — neither exists on the fallback paths
+            if scheduling != "continuous" or not plan_fusion:
+                raise ValueError("paged_kv requires scheduling='continuous' "
+                                 "and plan_fusion=True (the paged kernels "
+                                 "run only on the executed chunked path)")
+            reason = executable_decode_supported(cfg)
+            if reason is not None:
+                raise ValueError(f"paged_kv: config not executor-supported "
+                                 f"({reason}) — the vmapped fallback has no "
+                                 "paged cache")
+            if kv_block_size < 1 or 128 % kv_block_size:
+                raise ValueError(f"kv_block_size {kv_block_size} must divide "
+                                 "128 (cache lengths and kv chunks are "
+                                 "128-aligned)")
+            self.kv_block_size = kv_block_size
+            if kv_slot_blocks is None:
+                kv_slot_blocks = self._aligned_len() // kv_block_size
+            if (kv_slot_blocks * kv_block_size) % 128:
+                raise ValueError("kv_slot_blocks * kv_block_size = "
+                                 f"{kv_slot_blocks * kv_block_size} must be "
+                                 "a multiple of 128")
+            self.kv_slot_blocks = kv_slot_blocks
+            # default arena: every slot can hold its full logical capacity
+            # (parity-by-construction with the contiguous cache); tighter
+            # arenas degrade through LRU eviction, not rejection
+            if kv_blocks is None:
+                kv_blocks = batch * kv_slot_blocks + batch
+            self.kv_blocks = kv_blocks
+            from repro.serve.kv_pool import KVPool
+            # the pool persists across run() calls: the prefix trie keeps
+            # retired prompts' blocks cached, so a later run sharing a
+            # prefix skips those chunks too
+            self.kv_pool = KVPool(num_blocks=kv_blocks,
+                                  block_size=kv_block_size, slots=batch,
+                                  max_blocks_per_slot=kv_slot_blocks)
         # stitch_epilogues=False keeps the decode graph's producer→consumer
         # pairs as separate planner ops — the honest unstitched baseline the
         # differential tests and benchmarks compare against
@@ -256,7 +334,7 @@ class ServeEngine:
         self._decode = jax.jit(
             lambda p, c, t: lm.decode_step(cfg, p, c, t))
         self._prefill = jax.jit(
-            lambda p, b: lm.prefill(cfg, p, b, max_len=self.max_len))
+            lambda p, b: lm.prefill(cfg, p, b, max_len=self.cache_len))
 
         self.executed = False
         self._mixed_steps: dict[int, object] = {}   # prompt len -> jitted step
@@ -277,8 +355,8 @@ class ServeEngine:
             reason = executable_decode_supported(cfg)
             if reason is None:
                 # the executed decode program indexes the cache by the
-                # planned (128-aligned) length — size the cache to match
-                self.max_len = self._aligned_len()
+                # planned (128-aligned) length; ``cache_len`` exposes it —
+                # ``max_len`` stays exactly what the caller configured
                 if scheduling == "wavefront":
                     # the continuous path builds its own per-P steps
                     # (_cb_step) lazily; only wavefront decodes through
@@ -294,6 +372,21 @@ class ServeEngine:
     # ------------------------------------------------------------------
     def _aligned_len(self) -> int:
         return max(128, -(-self.max_len // 128) * 128)
+
+    @property
+    def cache_len(self) -> int:
+        """Rows of cache a slot can actually hold — the admission and
+        retirement limit.  ``max_len`` is immutable (exactly what the
+        caller configured); the executed paths size their cache to the
+        128-aligned length, and the paged path to the per-slot block-table
+        span, so capacity can EXCEED ``max_len`` (a paged engine with
+        ``kv_slot_blocks`` raised serves prompts the contiguous contract
+        would reject)."""
+        if getattr(self, "paged_kv", False):
+            return self.kv_slot_blocks * self.kv_block_size
+        if getattr(self, "executed", False):
+            return self._aligned_len()
+        return self.max_len
 
     def decode_graph(self, *, budget: Optional[PrefillBudget] = None,
                      prefill_chunks: int = 0, ffn_rows: int = 0,
@@ -341,7 +434,12 @@ class ServeEngine:
         d, H, Hkv = cfg.d_model, cfg.num_heads, cfg.num_kv_heads
         D = cfg.resolved_head_dim
         dt = jnp.dtype(cfg.dtype)
-        S = self._aligned_len()                        # cache, 128-aligned
+        paged = getattr(self, "paged_kv", False)
+        # paged: S is the per-slot LOGICAL capacity spanned by the block
+        # table (a 128-multiple by construction); contiguous: the
+        # 128-aligned cache length
+        S = self.cache_len if paged else self._aligned_len()
+        bt = (self.kv_blocks, self.kv_block_size) if paged else None
         B = self.batch
 
         norm1 = dataclasses.replace(rmsnorm_op(R=B, d=d, dtype=dt, bm=B),
@@ -349,10 +447,12 @@ class ServeEngine:
         norm2 = dataclasses.replace(rmsnorm_op(R=B, d=d, dtype=dt, bm=B),
                                     name="decode_norm2")
         # largest 128-multiple chunk <= 1024 that divides S (S is 128-aligned,
-        # so the scan bottoms out at ck=128)
+        # so the scan bottoms out at ck=128; kv_block_size divides 128, so a
+        # paged kv-chunk is always a whole number of pages)
         ck = next(c for c in range(min(1024, S), 0, -128) if S % c == 0)
         att = decode_attention_op(B=B, S=S, H=H, Hkv=Hkv, D=D, dtype=dt,
-                                  ck=ck, dynamic_length=dynamic_length)
+                                  ck=ck, dynamic_length=dynamic_length,
+                                  block_table=bt)
         # decode-slot projection: MoE router when the model routes, else the
         # FFN in-projection — weight streaming dominates at serving batch
         # (memory-bound; the honest fig_framework finding), so the planner
@@ -411,11 +511,13 @@ class ServeEngine:
             pf = dataclasses.replace(pf, name="prefill_ffn")
             graph.append(planner.GraphOp(pf))
         if prefill_chunks:
-            C = budget.effective_chunk(S)
+            C = budget.effective_chunk(
+                S, multiple=self.kv_block_size if paged else 1)
+            sfx = f"_pg{self.kv_block_size}" if paged else ""
             for i in range(prefill_chunks):
                 pa = prefill_attention_op(
-                    C, S, H, Hkv, D, dtype=dt, ck=ck,
-                    name=f"prefill_attn{i}_C{C}_S{S}_H{H}kv{Hkv}")
+                    C, S, H, Hkv, D, dtype=dt, ck=ck, block_table=bt,
+                    name=f"prefill_attn{i}_C{C}_S{S}_H{H}kv{Hkv}{sfx}")
                 graph.append(planner.GraphOp(pa))
         return graph
 
@@ -498,10 +600,19 @@ class ServeEngine:
                             measure=self._measure,
                             cache=self._schedule_cache)
 
+        paged = getattr(self, "paged_kv", False)
+        bs = self.kv_block_size if paged else 0
+
         def qkv_put(state, qkv):
             # the planned QKV matmul's output: split heads, RoPE at each
             # slot's own position, act-masked cache scatter (mirrors
-            # layers.qkv_project's slicing exactly)
+            # layers.qkv_project's slicing exactly).  Paged: the scatter
+            # routes through each slot's block-table row — writes land at
+            # (table[b, pos//bs], pos % bs) in the arena.  An idle slot's
+            # table row points at its private sentinel block and a
+            # prefilling slot's next block is its own (admission floors
+            # prefix reuse to whole chunks), so the masked no-op rewrites
+            # can never land on a block another slot shares.
             qkv = qkv.astype(dt)[:, None, :]                    # (B, 1, N)
             q = qkv[..., :H * D].reshape(B, 1, H, D)
             k = qkv[..., H * D:(H + Hkv) * D].reshape(B, 1, Hkv, D)
@@ -512,16 +623,19 @@ class ServeEngine:
             state = dict(state)
             state["q"] = q[:, 0]
             rows = jnp.arange(B)
+            if paged:
+                rows = state["bt"][rows, state["pos"] // bs]    # arena blocks
+                cols = state["pos"] % bs
+            else:
+                cols = state["pos"]
             # act-masked scatter: only decoding slots land k/v — a
             # prefilling slot's row at `pos` is live chunk data this very
             # step and must not be clobbered by its stale last-token write
             act = state["act"][:, None, None]
-            k_row = jnp.where(act, k[:, 0],
-                              state["k_cache"][rows, state["pos"]])
-            v_row = jnp.where(act, v[:, 0],
-                              state["v_cache"][rows, state["pos"]])
-            state["k_cache"] = state["k_cache"].at[rows, state["pos"]].set(k_row)
-            state["v_cache"] = state["v_cache"].at[rows, state["pos"]].set(v_row)
+            k_row = jnp.where(act, k[:, 0], state["k_cache"][rows, cols])
+            v_row = jnp.where(act, v[:, 0], state["v_cache"][rows, cols])
+            state["k_cache"] = state["k_cache"].at[rows, cols].set(k_row)
+            state["v_cache"] = state["v_cache"].at[rows, cols].set(v_row)
             return state
 
         def att_put(state, o):
@@ -554,9 +668,12 @@ class ServeEngine:
                      outputs={"out": Slot(put=qkv_put)})
         att_name = next(g.op.name for g in graph
                         if g.op.name.startswith("decode_attn"))
+        att_in = {"len": Slot(get=lambda s: (s["pos"] + 1)
+                              .reshape(B, 1).astype(jnp.int32))}
+        if paged:
+            att_in["bt"] = "bt"               # (B, max_blocks) device table
         reg.bind(att_name, q="q", k="k_cache", v="v_cache",
-                 inputs={"len": Slot(get=lambda s: (s["pos"] + 1)
-                                     .reshape(B, 1).astype(jnp.int32))},
+                 inputs=att_in,
                  outputs={"o": Slot(put=att_put), "m": "attn_m",
                           "l": "attn_l"})
         reg.bind("decode_norm2", x="h_mid", scale="norm2_scale",
@@ -578,13 +695,21 @@ class ServeEngine:
                 continue
             i = int(g.op.name.split("_")[1][4:])      # prefill_attn{i}_...
             # the chunk reads ITS OWN slot's cache rows — a (S, Hkv, D)
-            # gather the decode scatter never touches (act masks that slot)
-            reg.bind(g.op.name,
-                     inputs={"off": f"pf{i}_off", "q": f"pf{i}_q",
-                             "k": Slot(get=lambda s, i=i:
-                                       s["k_cache"][s[f"pf{i}_slot"]]),
-                             "v": Slot(get=lambda s, i=i:
-                                       s["v_cache"][s[f"pf{i}_slot"]])},
+            # gather the decode scatter never touches (act masks that slot).
+            # Paged: k/v are the WHOLE shared arena and the chunk's slot
+            # contributes its (1, max_blocks) table row instead.
+            if paged:
+                pf_in = {"off": f"pf{i}_off", "q": f"pf{i}_q",
+                         "k": "k_cache", "v": "v_cache",
+                         "bt": Slot(get=lambda s, i=i:
+                                    s["bt"][s[f"pf{i}_slot"]][None])}
+            else:
+                pf_in = {"off": f"pf{i}_off", "q": f"pf{i}_q",
+                         "k": Slot(get=lambda s, i=i:
+                                   s["k_cache"][s[f"pf{i}_slot"]]),
+                         "v": Slot(get=lambda s, i=i:
+                                   s["v_cache"][s[f"pf{i}_slot"]])}
+            reg.bind(g.op.name, inputs=pf_in,
                      outputs={"o": f"pf{i}_o", "m": f"pf{i}_m",
                               "l": f"pf{i}_l"})
         return executor.compile_plan(plan, bindings=reg, interpret=interpret)
@@ -707,8 +832,18 @@ class ServeEngine:
     # ------------------------------------------------------------------
     def _init_slot_cache(self):
         """The slot cache: ``lm.init_cache`` with the scalar wave position
-        replaced by the per-slot position vector (B,)."""
-        cache = lm.init_cache(self.cfg, self.batch, self.max_len)
+        replaced by the per-slot position vector (B,).  Paged: the k/v
+        leaves are the flat ``(kv_blocks, block_size, Hkv, D)`` arena the
+        block tables index into, not per-slot regions."""
+        if getattr(self, "paged_kv", False):
+            run = lm.layer_runs(self.cfg)[0]
+            dt = jnp.dtype(self.cfg.dtype)
+            shape = (self.kv_blocks, self.kv_block_size,
+                     self.cfg.num_kv_heads, self.cfg.resolved_head_dim)
+            return {"pos": jnp.zeros((self.batch,), jnp.int32),
+                    run.name: {"k": jnp.zeros(shape, dt),
+                               "v": jnp.zeros(shape, dt)}}
+        cache = lm.init_cache(self.cfg, self.batch, self.cache_len)
         cache["pos"] = jnp.zeros((self.batch,), jnp.int32)
         return cache
 
@@ -717,7 +852,7 @@ class ServeEngine:
         plain run leaves and axis 1 of scan-stacked (layer-major) leaves."""
         axes = {"pos": 0}
         for run in lm.layer_runs(self.cfg):
-            leaves = lm._cache_leaf_shapes(self.cfg, run, 1, self.max_len)
+            leaves = lm._cache_leaf_shapes(self.cfg, run, 1, self.cache_len)
             axes[run.name] = {name: (1 if run.count > 1 else 0)
                               for name in leaves}
         return axes
@@ -804,7 +939,11 @@ class ServeEngine:
         run = lm.layer_runs(cfg)[0]
         dt = jnp.dtype(cfg.dtype)
         n = n_chunks
-        C = self.prefill_budget.effective_chunk(self._aligned_len())
+        paged = getattr(self, "paged_kv", False)
+        bs = self.kv_block_size if paged else 0
+        C = self.prefill_budget.effective_chunk(
+            self.cache_len if paged else self._aligned_len(),
+            multiple=bs if paged else 1)
         program = self.build_decode_program(prefill_chunks=n)
         # a chunk counts as fused when it shares a launch with any
         # decode-side member — decode attention OR the stitched FFN chain
@@ -821,16 +960,22 @@ class ServeEngine:
             "steps": program.describe(),
         }
 
-        def step(params, cache, tokens, active,
+        def step(params, cache, tokens, active, bt=None,
                  ch_slots=None, ch_offs=None, ch_valid=None, ch_tokens=None):
             p = params[run.name]
             x = layers.embed_onehot(params["embed"], tokens[:, None], d)
             state = self._slot_state(params, cache, x[:, 0], cache["pos"],
                                      active)
+            if paged:
+                state["bt"] = bt              # (B, max_blocks) int32 tables
 
             # chunk pre-work: embed + norm + QKV + RoPE at absolute chunk
             # positions, then land the chunk's k/v in its slot's cache rows
-            # BEFORE the program (the prefill kernel only reads the cache)
+            # BEFORE the program (the prefill kernel only reads the cache).
+            # Paged: chunk offsets are chunk-aligned (admission floors
+            # prefix reuse to whole chunks), so the chunk covers exactly
+            # C // bs whole pages — gather their arena blocks from the
+            # slot's table row and scatter page by page.
             kc, vc = state["k_cache"], state["v_cache"]
             for i in range(n):
                 xp, _ = lm._embed_inputs(cfg, params,
@@ -842,10 +987,21 @@ class ServeEngine:
                                  cfg.rope_fraction)
                 kp = layers.rope(kp, positions, cfg.rope_theta,
                                  cfg.rope_fraction)
-                kc = jax.lax.dynamic_update_slice(
-                    kc, kp.astype(kc.dtype), (ch_slots[i], ch_offs[i], 0, 0))
-                vc = jax.lax.dynamic_update_slice(
-                    vc, vp.astype(vc.dtype), (ch_slots[i], ch_offs[i], 0, 0))
+                if paged:
+                    npg = C // bs
+                    blks = jax.lax.dynamic_slice(
+                        bt, (ch_slots[i], ch_offs[i] // bs), (1, npg))[0]
+                    kc = kc.at[blks].set(
+                        kp[0].reshape(npg, bs, *kp.shape[2:]).astype(kc.dtype))
+                    vc = vc.at[blks].set(
+                        vp[0].reshape(npg, bs, *vp.shape[2:]).astype(vc.dtype))
+                else:
+                    kc = jax.lax.dynamic_update_slice(
+                        kc, kp.astype(kc.dtype),
+                        (ch_slots[i], ch_offs[i], 0, 0))
+                    vc = jax.lax.dynamic_update_slice(
+                        vc, vp.astype(vc.dtype),
+                        (ch_slots[i], ch_offs[i], 0, 0))
                 state[f"pf{i}_q"] = qp[0].astype(dt)
                 state[f"pf{i}_x"] = xp[0]
                 state[f"pf{i}_slot"] = ch_slots[i]
@@ -931,7 +1087,7 @@ class ServeEngine:
             return "eos"
         if n_out >= req.max_new_tokens:
             return "max_new"
-        if pos >= self.max_len:
+        if pos >= self.cache_len:
             return "max_len"                 # cache full: truncate
         return None
 
@@ -974,13 +1130,18 @@ class ServeEngine:
         executed path admits by chunks (``_run_continuous_chunked``); the
         hand-wired fallback prefills whole prompts alongside the decode
         (``_run_continuous_plain``)."""
-        chunk = self.prefill_budget.effective_chunk(self._aligned_len())
+        paged = getattr(self, "paged_kv", False)
+        chunk = self.prefill_budget.effective_chunk(
+            self.cache_len if paged else self._aligned_len(),
+            multiple=self.kv_block_size if paged else 1)
         for r in requests:
-            if len(r.prompt) > self.max_len:
+            if len(r.prompt) > self.cache_len:
                 raise ValueError(
                     f"request {r.rid}: prompt length {len(r.prompt)} exceeds "
-                    f"max_seq_len {self.max_len} — continuous batching "
-                    f"cannot admit it (raise max_len or truncate the prompt)")
+                    f"max_seq_len {self.cache_len} — continuous batching "
+                    "cannot admit it (raise max_len"
+                    + (" or kv_slot_blocks" if paged else "")
+                    + " or truncate the prompt)")
             if self.reject_overlong and len(r.prompt) > chunk:
                 raise ValueError(
                     f"request {r.rid}: prompt length {len(r.prompt)} exceeds "
@@ -1007,13 +1168,32 @@ class ServeEngine:
         B = self.batch
         stats = self.stats
         budget = self.prefill_budget
-        C = budget.effective_chunk(self._aligned_len())
+        pool = self.kv_pool
+        paged = pool is not None
+        C = budget.effective_chunk(
+            self.cache_len if paged else self._aligned_len(),
+            multiple=self.kv_block_size if paged else 1)
+        if paged:
+            # the pool persists across runs (prefix cache survives); this
+            # run's stats report the deltas
+            pool_base = (pool.evictions, pool.prefix_hits,
+                         pool.prefix_tokens_reused)
         slots: list[Optional[Request]] = [None] * B   # decoding occupants
         pref: dict[int, dict] = {}                    # slot -> prefilling
         #                                               {req, done, ready}
         pos_h = [0] * B                               # host mirror of pos
         last = np.zeros(B, np.int32)
         cache = self._init_slot_cache()
+
+        def claim(b, req, now):
+            """Start prefilling ``req`` in slot ``b``.  Paged: allocate its
+            table row, and let a prefix-cache hit skip whole chunks —
+            ``done`` starts at the reused token count, not 0."""
+            ent = {"req": req, "done": 0, "ready": now}
+            if paged:
+                ent["done"] = pool.admit(b, req.prompt, C, now)
+                stats.prompt_tokens += len(req.prompt)
+            pref[b] = ent
 
         while waiting or any(s is not None for s in slots) or pref:
             step_i = stats.steps
@@ -1030,7 +1210,7 @@ class ServeEngine:
                 if slots[b] is None and b not in pref:
                     req = arrived.pop(0)
                     waiting.remove(req)
-                    pref[b] = {"req": req, "done": 0, "ready": step_i}
+                    claim(b, req, step_i)
             for b in range(B):
                 if not arrived:
                     break
@@ -1051,13 +1231,50 @@ class ServeEngine:
                 sel.sort(key=lambda b: (len(pref[b]["req"].prompt)
                                         - pref[b]["done"], b))
             sel = sel[:budget.max_coresident_chunks]
+            if paged:
+                # map the chunk's pages before its scatter; a chunk the
+                # arena cannot back this step (even after eviction) simply
+                # stalls — admission degrades gracefully, never crashes
+                sel = [b for b in sel
+                       if pool.ensure_rows(b, pref[b]["done"],
+                                           pref[b]["done"] + C, step_i)]
+                # each decoding slot writes one token row this step; a slot
+                # the pool cannot extend retires truncated (mirrors the
+                # contiguous cache-full rule, under dynamic pressure)
+                for b in range(B):
+                    if slots[b] is None:
+                        continue
+                    if not pool.ensure_rows(b, pos_h[b], pos_h[b] + 1,
+                                            step_i):
+                        req = slots[b]
+                        req.done = True
+                        slots[b] = None
+                        pool.release(b)
+                        stats.retirements.append((step_i, req.rid,
+                                                  "pool_full"))
             active = np.array([s is not None for s in slots])
             n_active = int(active.sum())
             n = len(sel)
 
             if n == 0 and n_active == 0:
+                ready = [b for b in pref if pref[b]["ready"] <= step_i]
+                if paged and ready:
+                    # arena deadlock: every schedulable chunk stalled with
+                    # no decoder left to drain blocks — fail the prompt
+                    # with the most work remaining (deterministic) so its
+                    # partial allocation frees the others
+                    b = max(ready, key=lambda b: (len(pref[b]["req"].prompt)
+                                                  - pref[b]["done"], b))
+                    req = pref.pop(b)["req"]
+                    req.done = True
+                    pool.release(b)
+                    stats.retirements.append((step_i, req.rid, "pool_full"))
                 stats.steps += 1                 # idle: future arrivals
                 continue
+            if paged:
+                bt_dev = jnp.asarray(np.asarray(pool.table, np.int32))
+                stats.blocks_in_use = max(stats.blocks_in_use,
+                                          pool.blocks_in_use)
 
             if n:
                 ch_valid = [min(C, len(pref[b]["req"].prompt)
@@ -1071,15 +1288,18 @@ class ServeEngine:
                 logits, cache, pf_logits = self._cb_step(n)(
                     self.params, cache, jnp.asarray(last),
                     jnp.asarray(active),
-                    jnp.asarray(np.asarray(sel, np.int32)),
-                    jnp.asarray(np.asarray([pref[b]["done"] for b in sel],
-                                           np.int32)),
-                    jnp.asarray(np.asarray(ch_valid, np.int32)),
-                    jnp.asarray(ch_tok))
+                    *((bt_dev,) if paged else ()),
+                    ch_slots=jnp.asarray(np.asarray(sel, np.int32)),
+                    ch_offs=jnp.asarray(
+                        np.asarray([pref[b]["done"] for b in sel],
+                                   np.int32)),
+                    ch_valid=jnp.asarray(np.asarray(ch_valid, np.int32)),
+                    ch_tokens=jnp.asarray(ch_tok))
             else:
                 logits, cache = self._cb_step(0)(
                     self.params, cache, jnp.asarray(last),
-                    jnp.asarray(active))
+                    jnp.asarray(active),
+                    *((bt_dev,) if paged else ()))
 
             stats.steps += 1
             if n_active:
@@ -1110,6 +1330,8 @@ class ServeEngine:
                 if reason:
                     req.done = True
                     slots[b] = None
+                    if paged:
+                        pool.release(b)
                     stats.retirements.append((stats.steps - 1, req.rid,
                                               reason))
             if n:
@@ -1120,10 +1342,24 @@ class ServeEngine:
                     pos_h[b] = ent["done"]
                     if ent["done"] >= len(ent["req"].prompt):
                         del pref[b]                    # prefill complete
+                        if paged:
+                            # the prompt is fully in cache: index its full
+                            # blocks so later prompts sharing the prefix
+                            # skip those chunks
+                            pool.register(b, ent["req"].prompt, step_i)
                         self._admit(ent["req"], b, pf_np[j], slots, pos_h,
                                     last)
+                        if paged and slots[b] is None:
+                            pool.release(b)       # admitted-and-retired
             for b, req in reserved:
-                pref[b] = {"req": req, "done": 0, "ready": stats.steps}
+                # the retiree's final decode ran this step (and, paged, its
+                # blocks were just released) — claim now, chunk next step
+                claim(b, req, stats.steps)
+        if paged:
+            stats.evictions = pool.evictions - pool_base[0]
+            stats.prefix_hits = pool.prefix_hits - pool_base[1]
+            stats.prefix_tokens_reused = (pool.prefix_tokens_reused
+                                          - pool_base[2])
         return requests
 
     def _run_continuous_plain(self, requests, waiting) -> list[Request]:

@@ -1,6 +1,7 @@
 """Operational tooling CLI.
 
   PYTHONPATH=src python -m repro.tools cache-inspect [--cache PATH] [--json]
+  PYTHONPATH=src python -m repro.tools kv-inspect --snapshot PATH [--json]
 
 ``cache-inspect`` dumps the persistent schedule cache
 (core/schedule_cache.py): one row per tuned bundle — members, mode,
@@ -9,6 +10,12 @@ stats: entry count vs the LRU bound, measured coverage, mean/max
 |cm-vs-measured delta|, and *stale signatures* (entries never consulted
 since they were recorded: the bundle shape they key no longer occurs in
 any planned graph, so they are LRU-eviction candidates).
+
+``kv-inspect`` reads a paged KV-pool snapshot (``launch/serve
+--kv-snapshot PATH``, serve/kv_pool.py): arena occupancy (in-use vs free
+vs evictable-cached blocks), the prefix-index counters (hits, tokens
+reused, trie size, evictions, COW copies), and one row per batch slot
+with its mapped block-table prefix.
 """
 from __future__ import annotations
 
@@ -72,6 +79,38 @@ def cache_inspect(args) -> int:
     return 0
 
 
+def kv_inspect(args) -> int:
+    with open(args.snapshot) as fh:
+        snap = json.load(fh)
+    if args.json:
+        print(json.dumps(snap, indent=1))
+        return 0
+    nb, bs = snap["num_blocks"], snap["block_size"]
+    slots = snap["slots"]
+    usable = nb - slots
+    used = snap["blocks_in_use"]
+    print(f"# kv pool: {nb} blocks x {bs} tokens "
+          f"({slots} sentinels, {usable} usable)")
+    print(f"# occupancy: {used}/{usable} in use "
+          f"({used / max(usable, 1):.0%}), {snap['free_blocks']} free, "
+          f"{snap['evictable_blocks']} cached-evictable")
+    print(f"# prefix index: {snap['trie_nodes']} trie nodes, "
+          f"{snap['prefix_hits']} hits, "
+          f"{snap['prefix_tokens_reused']} tokens reused, "
+          f"{snap['evictions']} evictions, "
+          f"{snap['cow_copies']} cow copies")
+    rows = [{"slot": t["slot"], "owned": t["owned"],
+             "tokens": t["owned"] * bs,
+             "blocks": ",".join(str(b) for b in t["blocks"]) or "-"}
+            for t in snap["tables"]]
+    cols = list(rows[0])
+    widths = {c: max(len(c), *(len(str(r[c])) for r in rows)) for c in cols}
+    print("  ".join(c.ljust(widths[c]) for c in cols))
+    for r in rows:
+        print("  ".join(str(r[c]).ljust(widths[c]) for c in cols))
+    return 0
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(prog="python -m repro.tools")
     sub = ap.add_subparsers(dest="cmd", required=True)
@@ -82,6 +121,14 @@ def main(argv=None) -> int:
                          "$REPRO_SCHEDULE_CACHE with its LRU bound)")
     ci.add_argument("--json", action="store_true")
     ci.set_defaults(fn=cache_inspect)
+    ki = sub.add_parser("kv-inspect",
+                        help="dump a paged KV-pool snapshot "
+                             "(launch/serve --kv-snapshot)")
+    ki.add_argument("--snapshot", required=True,
+                    help="snapshot JSON written by launch/serve "
+                         "--kv-snapshot PATH")
+    ki.add_argument("--json", action="store_true")
+    ki.set_defaults(fn=kv_inspect)
     args = ap.parse_args(argv)
     return args.fn(args)
 

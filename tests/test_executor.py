@@ -250,7 +250,7 @@ def test_executed_decode_step_matches_lm_decode(serve_setup):
     toks = jnp.stack([jnp.arange(1, 9, dtype=jnp.int32),
                       jnp.arange(3, 11, dtype=jnp.int32)])
     cache, logits = lm.prefill(cfg, params, {"tokens": toks},
-                               max_len=eng.max_len)
+                               max_len=eng.cache_len)
     cur = jnp.argmax(logits, -1)
     for _ in range(3):
         out_ref, cache_ref = lm.decode_step(cfg, params, cache, cur)

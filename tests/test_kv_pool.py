@@ -1,0 +1,163 @@
+"""KVPool unit contract (serve/kv_pool.py): pure host-side bookkeeping —
+no jax, no engine.  Covers the block lifecycle (admit -> ensure_rows ->
+register -> release), refcounted prefix sharing and its alignment floors,
+the cached-after-release rematch path, LRU leaf eviction under pressure,
+copy-on-write guards, arena exhaustion/recovery, and the snapshot shape
+``python -m repro.tools kv-inspect`` consumes."""
+import pytest
+
+from repro.serve.kv_pool import KVPool
+
+
+BS = 4          # block_size: small enough to exercise multi-block prompts
+
+
+def _pool(num_blocks=16, slots=2, max_blocks=8):
+    return KVPool(num_blocks=num_blocks, block_size=BS, slots=slots,
+                  max_blocks_per_slot=max_blocks)
+
+
+def _prompt(n, base=100):
+    return list(range(base, base + n))
+
+
+def test_validates_capacity():
+    with pytest.raises(ValueError, match="must exceed slots"):
+        KVPool(num_blocks=2, block_size=BS, slots=2, max_blocks_per_slot=4)
+
+
+def test_sentinel_tables_and_initial_occupancy():
+    p = _pool()
+    # slot b's table points wholly at sentinel b until rows are mapped
+    assert p.table[0] == [0] * 8 and p.table[1] == [1] * 8
+    assert p.blocks_in_use == 0 and len(p.free) == 14
+
+
+def test_lifecycle_ensure_register_release():
+    p = _pool()
+    toks = _prompt(10)                     # 2 full blocks + 2 tail tokens
+    assert p.admit(0, toks, chunk=BS, now=0) == 0   # cold: nothing to reuse
+    assert p.ensure_rows(0, 0, 10, now=0)
+    assert p.owned[0] == 3 and p.blocks_in_use == 3
+    assert all(p.ref[b] == 1 for b in p.table[0][:3])
+    p.register(0, toks, now=1)
+    snap = p.snapshot()
+    assert snap["trie_nodes"] == 2         # only FULL blocks are indexed
+    p.release(0)
+    assert p.owned[0] == 0 and p.table[0] == [0] * 8
+    # 2 registered blocks stay cached, the tail block frees; only the
+    # chain's LEAF is immediately evictable (children pin parents)
+    assert p.blocks_in_use == 2 and snap["block_size"] == BS
+    assert p.snapshot()["evictable_blocks"] == 1
+
+
+def test_prefix_reuse_shares_blocks_and_bumps_refs():
+    p = _pool()
+    toks = _prompt(12)                     # 3 full blocks
+    p.admit(0, toks, chunk=BS, now=0)
+    p.ensure_rows(0, 0, 12, now=0)
+    p.register(0, toks, now=0)
+    shared = list(p.table[0][:3])
+    reuse = p.admit(1, toks + _prompt(4, base=900), chunk=BS, now=1)
+    # all 3 indexed blocks match; floor(12, lcm(4,4)) = 12 tokens skipped
+    assert reuse == 12
+    assert p.table[1][:3] == shared
+    assert all(p.ref[b] == 2 for b in shared)
+    assert p.prefix_hits == 1 and p.prefix_tokens_reused == 12
+    p.release(0)
+    assert all(p.ref[b] == 1 for b in shared)   # slot 1 still holds them
+
+
+def test_reuse_floored_to_chunk_and_capped_below_prompt_len():
+    p = _pool(num_blocks=32, max_blocks=16)
+    toks = _prompt(24)                     # 6 full blocks
+    p.admit(0, toks, chunk=BS, now=0)
+    p.ensure_rows(0, 0, 24, now=0)
+    p.register(0, toks, now=0)
+    p.release(0)
+    # chunk=8 -> align lcm(4,8)=8: 6 matched blocks (24 tok) floor to 24,
+    # but the cap len-1=23 forces the FINAL chunk to run -> floor to 16
+    assert p.admit(1, toks, chunk=8, now=1) == 16
+    p.release(1)
+    # ragged chunk=6 -> align lcm(4,6)=12: floor(23, 12) = 12
+    assert p.admit(0, toks, chunk=6, now=2) == 12
+    p.release(0)
+    # longer prompt sharing the prefix: cap no longer binds, full 24 reused
+    assert p.admit(1, toks + _prompt(8, base=500), chunk=8, now=3) == 24
+
+
+def test_cached_blocks_rematch_after_release():
+    """The whole point of the prefix cache: blocks survive their slot."""
+    p = _pool()
+    toks = _prompt(8)
+    p.admit(0, toks, chunk=BS, now=0)
+    p.ensure_rows(0, 0, 8, now=0)
+    p.register(0, toks, now=0)
+    blocks = list(p.table[0][:2])
+    p.release(0)
+    assert p.blocks_in_use == 2            # cached, not freed
+    reuse = p.admit(0, toks + [7, 8, 9], chunk=BS, now=1)
+    assert reuse == 8 and p.table[0][:2] == blocks
+
+
+def test_lru_evicts_leaf_first_and_counts():
+    p = _pool(num_blocks=2 + 4, slots=2, max_blocks=4)   # 4 usable blocks
+    a = _prompt(8, base=0)                 # 2 blocks, chained in the trie
+    p.admit(0, a, chunk=BS, now=0)
+    p.ensure_rows(0, 0, 8, now=0)
+    p.register(0, a, now=0)
+    p.release(0)                           # both cached: leaf + its parent
+    assert p.snapshot()["evictable_blocks"] == 1   # children pin parents
+    # demand 3 fresh blocks: 2 free remain, so the LRU ref-0 LEAF evicts
+    # first; its parent becomes a leaf and evicts next
+    p.admit(1, _prompt(12, base=500), chunk=BS, now=5)
+    assert p.ensure_rows(1, 0, 12, now=5)
+    assert p.evictions == 1
+    p.release(1)
+
+
+def test_exhaustion_returns_false_keeps_partial_and_recovers():
+    p = _pool(num_blocks=2 + 3, slots=2, max_blocks=8)   # 3 usable blocks
+    p.admit(0, _prompt(12), chunk=BS, now=0)
+    assert p.ensure_rows(0, 0, 12, now=0)          # takes all 3
+    p.admit(1, _prompt(12, base=500), chunk=BS, now=0)
+    assert not p.ensure_rows(1, 0, 12, now=0)      # arena exhausted
+    assert p.owned[1] == 0                         # nothing was mappable
+    p.release(0)                                   # unregistered -> freed
+    assert p.ensure_rows(1, 0, 12, now=1)          # recovers
+    # beyond the per-slot table is a hard False, no allocation attempted
+    assert not p.ensure_rows(1, 8 * BS, 8 * BS + 1, now=1)
+
+
+def test_prepare_write_cow_on_shared_and_registered_blocks():
+    p = _pool()
+    toks = _prompt(8)
+    p.admit(0, toks, chunk=BS, now=0)
+    p.ensure_rows(0, 0, 8, now=0)
+    assert p.prepare_write(0, 5, now=0) is None    # private: no copy
+    p.register(0, toks, now=0)
+    blk = p.table[0][1]
+    got = p.prepare_write(0, 5, now=1)             # registered: future
+    assert got is not None and got[1] == blk       # slots may match it
+    new, old = got
+    assert p.table[0][1] == new and p.ref[old] == 0 and p.ref[new] == 1
+    assert p.cow_copies == 1
+    # unmapped row (sentinel) never copies
+    assert p.prepare_write(1, 0, now=1) is None
+
+
+def test_snapshot_reports_tables_and_counters():
+    p = _pool()
+    toks = _prompt(12)
+    p.admit(0, toks, chunk=BS, now=0)
+    p.ensure_rows(0, 0, 12, now=0)
+    snap = p.snapshot()
+    assert snap["num_blocks"] == 16 and snap["slots"] == 2
+    assert snap["blocks_in_use"] == 3
+    row = snap["tables"][0]
+    assert row["owned"] == 3 and len(row["blocks"]) == 3
+    assert snap["tables"][1]["blocks"] == []
+    for key in ("free_blocks", "evictable_blocks", "evictions",
+                "prefix_hits", "prefix_tokens_reused", "cow_copies",
+                "trie_nodes"):
+        assert key in snap

@@ -112,6 +112,31 @@ def test_budget_effective_chunk_divides_cache():
         assert c <= rows and cache % c == 0
 
 
+def test_budget_effective_chunk_ragged_cache_lengths():
+    """Direct largest-divisor computation (no O(cache_len) scan): exact on
+    ragged cache lengths — primes, prime powers, highly-composite — and on
+    the paged form, where the chunk must ALSO be a multiple of the KV block
+    size so every chunk is a whole number of pages."""
+    for rows, cache in ((8, 127), (50, 121), (36, 360), (17, 97),
+                        (1, 4096), (5000, 3600), (64, 2 * 3 * 5 * 7 * 11)):
+        got = PrefillBudget(chunk_rows=rows).effective_chunk(cache)
+        brute = max(d for d in range(1, min(rows, cache) + 1)
+                    if cache % d == 0)
+        assert got == brute, (rows, cache, got, brute)
+    # multiple=: chunk is the largest divisor of cache that is BOTH a
+    # multiple of `multiple` and <= chunk_rows (floored up to `multiple`)
+    for rows, cache, mult in ((8, 128, 16), (48, 96, 16), (40, 320, 8),
+                              (16, 256, 16), (9, 144, 4)):
+        got = PrefillBudget(chunk_rows=rows).effective_chunk(cache, mult)
+        cands = [d for d in range(mult, cache + 1, mult)
+                 if cache % d == 0 and d <= max(rows, mult)]
+        assert got == (max(cands) if cands else mult), \
+            (rows, cache, mult, got)
+        assert got % mult == 0 and cache % got == 0
+    with pytest.raises(ValueError, match="multiple"):
+        PrefillBudget(chunk_rows=8).effective_chunk(100, 16)
+
+
 def test_budget_pad_rows():
     b = PrefillBudget(pad_to=128)
     assert b.pad_rows(7) == 7            # raw below one tile
