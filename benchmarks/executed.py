@@ -36,6 +36,13 @@ live operands:
                  skips whole chunks), nonzero hit rate, and the block
                  table bound as a real operand on both paged attention
                  ops inside the fused launch.
+  serve_sharded_vs_single — the same trace served single-device and
+                 4-way tensor-parallel (shard_map over 4 fake CPU
+                 devices, in a subprocess so XLA_FLAGS precedes the jax
+                 import): identical token streams, a fused mixed
+                 prefill⊕decode bundle in every shard's program, and
+                 per-shard predicted HBM traffic strictly below the
+                 single-device graph's.
 
 Each program is verified against the hand-wired reference (jnp oracles /
 ``run_single`` chains / the wavefront differential oracle) and the
@@ -432,11 +439,97 @@ def _serve_paged_row(interpret: bool) -> dict:
     }
 
 
+def _serve_sharded_row(interpret: bool) -> dict:
+    """Tensor-parallel serve as a measured delta: the same staggered trace
+    served by the single-device executed engine and the 4-way shard_map
+    engine (4 fake CPU devices).  Gates: token streams identical (the
+    head-sharded attention + psum glue is pure partitioning), the shard
+    program still carries a fused mixed prefill⊕decode bundle (SPMD traces
+    one program per shard, so the engine's launch table IS every shard's),
+    and the per-shard predicted HBM traffic — summed over the shard-local
+    planner graph — is STRICTLY below the single-device graph's.
+
+    Multi-device XLA_FLAGS must precede the jax import, so the comparison
+    runs in a subprocess and reports its row as JSON."""
+    import os
+    import subprocess
+    import textwrap
+
+    code = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+        import sys; sys.path.insert(0, {src!r})
+        import dataclasses, json, time
+        import jax, numpy as np
+        from jax.sharding import Mesh
+        from repro.configs import get_config
+        from repro.models import lm
+        from repro.serve.engine import PrefillBudget, Request, ServeEngine
+
+        cfg = dataclasses.replace(get_config("granite-3-2b").reduced(),
+                                  dtype="float32")
+        params = lm.init(cfg, jax.random.PRNGKey(0))
+        budget = PrefillBudget(chunk_rows=8, max_coresident_chunks=2)
+
+        def requests():
+            rng = np.random.default_rng(17)
+            return [Request(rid=i, prompt=rng.integers(
+                                1, cfg.vocab_size, L).astype(np.int32),
+                            max_new_tokens=m)
+                    for i, (L, m) in enumerate(zip((6, 11, 7, 9, 8),
+                                                   (4, 6, 5, 2, 3)))]
+
+        kw = dict(batch=2, max_len=48, scheduling="continuous",
+                  plan_fusion=True, prefill_budget=budget)
+        single = ServeEngine(cfg, params, **kw)
+        rs = requests()
+        t0 = time.perf_counter(); single.run(rs)
+        dt_single = time.perf_counter() - t0
+
+        mesh = Mesh(np.array(jax.devices())[:4], ("model",))
+        tp = ServeEngine(cfg, params, mesh=mesh, **kw)
+        assert tp.tp_shards == 4 and tp.executed
+        rt = requests()
+        t0 = time.perf_counter(); tp.run(rt)
+        dt_tp = time.perf_counter() - t0
+
+        n = budget.max_coresident_chunks
+        shard_hbm = sum(g.op.hbm_bytes
+                        for g in tp.decode_graph(prefill_chunks=n))
+        full_hbm = sum(g.op.hbm_bytes
+                       for g in single.decode_graph(prefill_chunks=n))
+        mixed = {{k: v for k, v in tp.cb_program_info.items() if k}}
+        st = tp.stats
+        row = {{"program": "serve_sharded_vs_single",
+               **mixed[max(mixed)],
+               "token_mismatches": int(sum(a.out_tokens != b.out_tokens
+                                           for a, b in zip(rs, rt))),
+               "tp_shards": tp.tp_shards, "mesh_tag": tp._mesh_tag,
+               "executed_s": dt_tp, "single_device_s": dt_single,
+               "per_shard_hbm_bytes": shard_hbm,
+               "single_device_hbm_bytes": full_hbm,
+               "mixed_chunks_fused": sorted(tp._cb_fused_chunks[max(mixed)]),
+               "fused_mixed_steps": st.fused_mixed_steps,
+               "fused_mixed_fraction": st.fused_mixed_steps
+                                       / max(st.decode_steps, 1),
+               "tokens": st.tokens, "slot_occupancy": st.occupancy}}
+        print("SHARDED_ROW::" + json.dumps(row))
+    """).format(src=str(Path(__file__).resolve().parents[1] / "src"))
+    env = {**os.environ, "JAX_PLATFORMS": "cpu"}
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, timeout=1200, env=env)
+    assert out.returncode == 0, out.stderr[-3000:]
+    line = next(l for l in out.stdout.splitlines()
+                if l.startswith("SHARDED_ROW::"))
+    return json.loads(line[len("SHARDED_ROW::"):])
+
+
 def run(backend: str = "interpret", out_path: str | None = None) -> dict:
     interpret = backend != "tpu" and backend != "gpu"
     rows = [_train_update_row(interpret), _serve_decode_row(interpret),
             _serve_continuous_row(interpret), _serve_stitched_row(interpret),
-            _serve_paged_row(interpret)]
+            _serve_paged_row(interpret), _serve_sharded_row(interpret)]
     for r in rows:
         if "max_err" in r:
             assert r["max_err"] < 2e-4, (r["program"], r["max_err"])
@@ -497,6 +590,22 @@ def run(backend: str = "interpret", out_path: str | None = None) -> dict:
           f"(prefix_hit_rate {pg['prefix_hit_rate']:.0%}, "
           f"{pg['prefix_tokens_reused']} tokens reused), peak "
           f"{pg['peak_blocks_in_use']} blocks, {pg['evictions']} evictions")
+    sh = rows[5]
+    # tensor parallelism must be free on tokens and a strict HBM win: the
+    # shard-local graph streams 1/tp of the heads and FFN width while the
+    # replicated norms stay whole, so per-shard traffic sits strictly
+    # between full/tp and full
+    assert sh["tp_shards"] == 4 and sh["mesh_tag"] == "model:4", sh
+    assert sh["mixed_chunks_fused"], \
+        "no prefill chunk fused into the shard program"
+    assert sh["fused_mixed_steps"] >= 1, sh
+    assert sh["per_shard_hbm_bytes"] < sh["single_device_hbm_bytes"], sh
+    print(f"# sharded: {sh['tp_shards']}-way '{sh['mesh_tag']}', "
+          f"{sh['fused_launches']} fused / {sh['total_launches']} launches "
+          f"per shard, per-shard HBM "
+          f"{sh['per_shard_hbm_bytes'] / sh['single_device_hbm_bytes']:.0%} "
+          f"of single-device, fused mixed bundle on "
+          f"{sh['fused_mixed_fraction']:.0%} of decode steps")
     report = {"backend": backend, "git_sha": git_sha(), "rows": rows}
     out = Path(out_path or f"BENCH_executed_{backend}_{report['git_sha']}.json")
     out.write_text(json.dumps(report, indent=1))

@@ -212,7 +212,8 @@ def _coordinate_descent(variants, best: Candidate, vmem_budget: int,
 def search(variants: Sequence, *, vmem_budget: int = VMEM_BUDGET,
            measure: Optional[Callable] = None, top_k: int = 3,
            cd_budget: Optional[int] = None, auto_shrink: bool = True,
-           cache: Optional[sc.ScheduleCache] = None) -> SearchResult:
+           cache: Optional[sc.ScheduleCache] = None,
+           mesh_tag: str = "") -> SearchResult:
     """Two-stage schedule search over schedules x bundle variants x VMEM caps.
 
     ``variants``: one bundle — ``(opA, opB)`` or ``(op1, .., opN)`` — or a
@@ -225,6 +226,10 @@ def search(variants: Sequence, *, vmem_budget: int = VMEM_BUDGET,
 
     ``cache``: optional ScheduleCache — a hit returns the recorded best
     schedule without searching (SEARCH_COUNT does not move).
+
+    ``mesh_tag``: SPMD context tag (``"<axis>:<extent>"``) for plans tuned
+    per shard of a mesh — part of the cache signature, so a sharded plan
+    never resolves a single-device schedule (or vice versa).
     """
     variants = _expand_variants(_as_variants(variants), vmem_budget,
                                 auto_shrink)
@@ -233,7 +238,7 @@ def search(variants: Sequence, *, vmem_budget: int = VMEM_BUDGET,
     key = None
     if cache is not None:
         key = sc.bundle_signature(variants[0], vmem_budget=vmem_budget,
-                                  mode=mode)
+                                  mode=mode, mesh_tag=mesh_tag)
         entry = cache.get(key)
         # an entry whose tuned variant doesn't resolve to the SAME OpSpecs
         # in THIS call's variant list (the signature keys only variants[0])

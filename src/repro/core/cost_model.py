@@ -20,9 +20,12 @@ forfeits pipelining — modeled as degrading overlap from max(Σc, Σm) toward
 """
 from __future__ import annotations
 
+import json
 import math
+import os
+import re
 from dataclasses import dataclass
-from typing import Sequence
+from typing import Optional, Sequence
 
 from repro.core.op_spec import OpSpec
 from repro.distributed.hlo_analysis import HBM_BW, PEAK_FLOPS, VMEM_BYTES
@@ -43,11 +46,85 @@ LAUNCH_S = 2e-6
 # autotuner's coordinate descent — one bound, one search space.
 MAX_RATIO = 4096
 
+# ---------------------------------------------------------------------------
+# Measured-delta corrections (fitted, default OFF)
+#
+# The measured-mode search records cm_vs_measured_delta_pct per bundle;
+# ``python -m repro.tools fit-cost`` distills the accumulated history
+# (benchmarks/history/BENCH_measured_*.json) into a per-op-class
+# multiplicative correction table — clamped medians of measured/predicted.
+# The table is consulted only when loaded ($REPRO_COST_CORRECTIONS=<path>
+# or set_corrections(...)); with nothing loaded every factor is exactly
+# 1.0 and the model is byte-for-byte the analytic roofline above.
+# ---------------------------------------------------------------------------
+CORRECTION_CLAMP = (0.5, 2.0)
+
+# parameter segments in generated op names (B3, S128, H4kv4, C8, pg16, 1d):
+# a short alpha prefix followed by a digit, or a leading digit
+_PARAM_SEG = re.compile(r"^[A-Za-z]{0,3}\d")
+_CHAIN_SEP = "→"                       # stitch.CHAIN_SEP, sans import
+
+_corrections: Optional[dict] = None
+_corrections_env_loaded = False
+
+
+def op_class(name: str) -> str:
+    """Stable class key for an op name: shape/index parameters stripped.
+    ``decode_attn_B3_S128_H4kv4`` and ``decode_attn_B2_S256_H8kv4`` are one
+    class; ``prefill_attn0_C8_...`` and ``prefill_attn1_C16_...`` are one
+    class; a stitched chain is the chain of its members' classes."""
+    if _CHAIN_SEP in name:
+        return _CHAIN_SEP.join(op_class(p) for p in name.split(_CHAIN_SEP))
+    kept = []
+    for seg in name.split("_"):
+        if _PARAM_SEG.match(seg):
+            continue                        # B3 / S128 / H4kv4 / 1d / pg16
+        kept.append(seg.rstrip("0123456789"))   # norm1 -> norm, attn0 -> attn
+    return "_".join(s for s in kept if s) or name
+
+
+def set_corrections(table: Optional[dict]) -> None:
+    """Install (or clear, with None) the per-op-class correction table:
+    ``{class: factor}`` or the fit-cost file schema ``{"classes": {class:
+    {"correction": factor, ...}}}``."""
+    global _corrections, _corrections_env_loaded
+    if table is not None and "classes" in table:
+        table = {k: float(v["correction"] if isinstance(v, dict) else v)
+                 for k, v in table["classes"].items()}
+    _corrections = table
+    _corrections_env_loaded = True          # explicit call wins over env
+
+
+def _correction_table() -> Optional[dict]:
+    global _corrections_env_loaded
+    if not _corrections_env_loaded:
+        _corrections_env_loaded = True
+        path = os.environ.get("REPRO_COST_CORRECTIONS")
+        if path:
+            try:
+                with open(path) as fh:
+                    set_corrections(json.load(fh))
+            except (OSError, json.JSONDecodeError, KeyError, TypeError,
+                    ValueError):
+                pass                        # unreadable table == no table
+    return _corrections
+
+
+def correction_for(name: str) -> float:
+    """Fitted multiplicative factor for this op's class (1.0 unless a
+    table is loaded and carries the class)."""
+    table = _correction_table()
+    if not table:
+        return 1.0
+    lo, hi = CORRECTION_CLAMP
+    return min(hi, max(lo, float(table.get(op_class(name), 1.0))))
+
 
 def native_time(op: OpSpec) -> float:
     """Standalone kernel wall-time model: roofline + ramp + launch."""
     ramp = (op.t_compute + op.t_memory) / max(op.grid, 1)
-    return max(op.t_compute, op.t_memory) + ramp + LAUNCH_S
+    return (max(op.t_compute, op.t_memory) + ramp) * correction_for(op.name) \
+        + LAUNCH_S
 
 
 class Schedule:
@@ -141,8 +218,9 @@ def hfused_cost(*args, vmem_budget: int = VMEM_BUDGET) -> FusedEstimate:
     ``hfused_cost(a, b, sched)``.
     """
     ops, sched = _as_bundle(args)
-    tcs = [op.t_compute for op in ops]
-    tms = [op.t_memory for op in ops]
+    corr = [correction_for(op.name) for op in ops]
+    tcs = [op.t_compute * c for op, c in zip(ops, corr)]
+    tms = [op.t_memory * c for op, c in zip(ops, corr)]
     ramps = [(tc + tm) / max(op.grid, 1)
              for op, tc, tm in zip(ops, tcs, tms)]
     t_native = sum(native_time(op) for op in ops)       # N launches

@@ -212,7 +212,8 @@ def _contract_chains(graph: Sequence[GraphOp]) -> tuple[GraphOp, ...]:
 
 def _bundle_search(bundle: Sequence[OpSpec],
                    memo: dict[frozenset, autotuner.SearchResult],
-                   cache: Optional[ScheduleCache]) -> autotuner.SearchResult:
+                   cache: Optional[ScheduleCache],
+                   mesh_tag: str = "") -> autotuner.SearchResult:
     """Autotune a bundle, memoized per bundle-name-set.
 
     Bundle growth re-evaluates every (bundle, candidate) pair each
@@ -221,15 +222,17 @@ def _bundle_search(bundle: Sequence[OpSpec],
     names are unique, so the name set identifies the OpSpec set."""
     key = frozenset(op.name for op in bundle)
     if key not in memo:
-        memo[key] = autotuner.search(tuple(bundle), cache=cache)
+        memo[key] = autotuner.search(tuple(bundle), cache=cache,
+                                     mesh_tag=mesh_tag)
     return memo[key]
 
 
 def _bundle_cost(bundle: Sequence[OpSpec],
                  memo: dict[frozenset, autotuner.SearchResult],
-                 cache: Optional[ScheduleCache]) -> float:
+                 cache: Optional[ScheduleCache],
+                 mesh_tag: str = "") -> float:
     """Best predicted fused time for a bundle (cost-model autotune)."""
-    return _bundle_search(bundle, memo, cache).best.est.t_hfused
+    return _bundle_search(bundle, memo, cache, mesh_tag).best.est.t_hfused
 
 
 def _measured_speedup(res: autotuner.SearchResult, bundle: Sequence[OpSpec],
@@ -257,7 +260,8 @@ def _measured_speedup(res: autotuner.SearchResult, bundle: Sequence[OpSpec],
 def plan(graph: Sequence[GraphOp], *, min_gain_pct: float = 2.0,
          allow_same_bound: bool = False, max_ways: int = 2,
          measure: Optional[Callable] = None,
-         cache: Optional[ScheduleCache] = None) -> FusionPlan:
+         cache: Optional[ScheduleCache] = None,
+         mesh_tag: str = "") -> FusionPlan:
     """Build ≤``max_ways``-way fusion bundles over the independent ops.
 
     ``max_ways=2`` reproduces the paper's pairwise planning; raise it to
@@ -273,6 +277,11 @@ def plan(graph: Sequence[GraphOp], *, min_gain_pct: float = 2.0,
     Declared epilogue chains (``OpSpec.epilogue``) are contracted into
     single stitched members first — ``_contract_chains`` — so horizontal
     packing runs over the vertically-fused graph.
+
+    ``mesh_tag`` (``"<axis>:<extent>"``) marks a plan built over
+    shard-local op shapes for one shard of a tensor-parallel mesh — it
+    rides into every bundle signature so sharded and single-device plans
+    never share schedule-cache entries.
     """
     graph = _contract_chains(graph)
     ops = {g.op.name: g for g in graph}
@@ -280,7 +289,7 @@ def plan(graph: Sequence[GraphOp], *, min_gain_pct: float = 2.0,
     batch = cache.batched() if cache is not None else contextlib.nullcontext()
     with batch:
         return _plan_inner(graph, ops, memo, min_gain_pct, allow_same_bound,
-                           max_ways, measure, cache)
+                           max_ways, measure, cache, mesh_tag)
 
 
 def _starves_unseeded(graph, ops, clo, used: set[str],
@@ -317,7 +326,7 @@ def _starves_unseeded(graph, ops, clo, used: set[str],
 
 
 def _plan_inner(graph, ops, memo, min_gain_pct, allow_same_bound, max_ways,
-                measure, cache) -> FusionPlan:
+                measure, cache, mesh_tag="") -> FusionPlan:
     clo = _reachable(ops)
     mem = sorted((g.op for g in graph if g.op.bound == "memory"),
                  key=lambda o: -o.t_native)
@@ -352,7 +361,7 @@ def _plan_inner(graph, ops, memo, min_gain_pct, allow_same_bound, max_ways,
 
         # grow: admit the op with the largest marginal predicted gain —
         # t_hfused(bundle ∪ {x}) must beat t_hfused(bundle) + native(x)
-        t_now = _bundle_cost(bundle, memo, cache)
+        t_now = _bundle_cost(bundle, memo, cache, mesh_tag)
         while len(bundle) < max_ways:
             names_now = tuple(b.name for b in bundle)
             pool = [g.op for g in graph
@@ -366,7 +375,7 @@ def _plan_inner(graph, ops, memo, min_gain_pct, allow_same_bound, max_ways,
             if not pool:
                 break
             scored = [(t_now + native_time(x)
-                       - _bundle_cost(bundle + [x], memo, cache), x)
+                       - _bundle_cost(bundle + [x], memo, cache, mesh_tag), x)
                       for x in pool]
             marginal, x = max(scored, key=lambda s: s[0])
             # a material fraction of x's native time must vanish — launch-
@@ -378,12 +387,12 @@ def _plan_inner(graph, ops, memo, min_gain_pct, allow_same_bound, max_ways,
             t_now = t_now + native_time(x) - marginal
 
         if measure is None:
-            res = _bundle_search(bundle, memo, cache)
+            res = _bundle_search(bundle, memo, cache, mesh_tag)
         else:
             # measured final tuning (separate cache mode key: the measured
             # schedule may legitimately differ from the cost-model one)
             res = autotuner.search(tuple(bundle), measure=measure,
-                                   cache=cache)
+                                   cache=cache, mesh_tag=mesh_tag)
         gain = res.best.est.speedup_pct()
         names = tuple(b.name for b in bundle)
         measured_pct = (None if measure is None

@@ -11,7 +11,7 @@ stale entry is simply never consulted again.  Bumping ``CACHE_VERSION``
 
 File format (JSON, human-inspectable):
 
-    {"version": 3,
+    {"version": 4,
      "entries": {"<sha256-prefix>": {
         "members": ["maxpool", "upsample", "sha_like"],
         "ratios": [2, 1, 4], "variant": 0, "vmem_cap": null,
@@ -42,16 +42,26 @@ import jax.numpy as jnp
 
 from repro.core.op_spec import OpSpec
 
-CACHE_VERSION = 3      # v3: bundle signatures carry chain structure
+CACHE_VERSION = 4      # v4: signatures carry the mesh-axis tag (tensor-
+#                        parallel plans tune shard-local operand shapes and
+#                        must never resolve a single-device schedule)
 
 _DEFAULT: Optional["ScheduleCache"] = None
 
 
 def bundle_signature(ops: Sequence[OpSpec], *, vmem_budget: int,
-                     mode: str = "costmodel") -> str:
+                     mode: str = "costmodel", mesh_tag: str = "") -> str:
     """Exact identity of a tuning problem.  Includes everything the search
-    outcome can depend on; excludes anything it cannot (body closures)."""
+    outcome can depend on; excludes anything it cannot (body closures).
+
+    ``mesh_tag`` names the SPMD context a sharded plan tunes for (e.g.
+    ``"model:4"`` — the mesh axis and its extent).  Per-shard operand
+    shapes alone already differ from the single-device plan, but two
+    different meshes can produce identical shard-local shapes (8 heads on
+    2 shards vs 4 heads unsharded), so the tag is part of the identity."""
     parts = [f"v{CACHE_VERSION}", mode, str(int(vmem_budget))]
+    if mesh_tag:
+        parts.append(f"mesh[{mesh_tag}]")
     for op in ops:
         operands = ",".join(
             "{}:{}:{}".format("x".join(map(str, o.shape)),

@@ -253,3 +253,89 @@ def param_shardings(specs, mesh: Mesh, rules: dict, dtype="bfloat16"):
 
 def replicated(mesh: Mesh):
     return NamedSharding(mesh, P())
+
+
+# ---------------------------------------------------------------------------
+# Tensor-parallel serve helpers (head-sharded executed decode; serve/engine)
+# ---------------------------------------------------------------------------
+# The serve engine shards the decode program along attention heads / FFN
+# width: each shard owns H/n query heads, Hkv/n KV heads and d_ff/n FFN
+# columns, activations (d_model) stay replicated, and the two row-sharded
+# output projections (w_o, w_out) psum their partial products.  Two fused
+# weights need a COLUMN PERMUTATION before the even last-axis split hands
+# each shard a self-consistent slab:
+#
+#   w_qkv (d, (H+2*Hkv)*D)  columns are [q_0..q_{H-1} | k_0.. | v_0..] —
+#       a plain split would give shard 0 query heads only.  Permuted to
+#       shard-major [q_s | k_s | v_s] per shard, the engine's head-split
+#       glue works unchanged with local head counts.
+#   w_in  (d, 2*d_ff)       gated activations store [gate | up]; permuted
+#       to per-shard [gate_s | up_s] so the split-in-half gate math stays
+#       local.  (Non-gated w_in needs no permutation.)
+#
+# Row-sharded weights (w_o rows are head-major, w_out rows follow the
+# activation's column order) split evenly without reordering.
+
+_TP_COL_SHARDED = ("w_qkv", "w_in")     # shard last axis (after permutation)
+_TP_ROW_SHARDED = ("w_o", "w_out")      # shard axis -2; psum after matmul
+
+
+def tp_qkv_permutation(H: int, Hkv: int, D: int, shards: int) -> np.ndarray:
+    """Column permutation taking [q|k|v] to shard-major [q_s|k_s|v_s]."""
+    if H % shards or Hkv % shards:
+        raise ValueError(f"H={H}, Hkv={Hkv} not divisible by {shards} shards")
+    Hl, Hkvl = H // shards * D, Hkv // shards * D
+    idx = []
+    for s in range(shards):
+        idx.extend(range(s * Hl, (s + 1) * Hl))
+        idx.extend(range(H * D + s * Hkvl, H * D + (s + 1) * Hkvl))
+        idx.extend(range((H + Hkv) * D + s * Hkvl,
+                         (H + Hkv) * D + (s + 1) * Hkvl))
+    return np.asarray(idx, np.int32)
+
+
+def tp_gated_ffn_permutation(F: int, shards: int) -> np.ndarray:
+    """Column permutation taking [gate|up] to per-shard [gate_s|up_s]."""
+    if F % shards:
+        raise ValueError(f"d_ff={F} not divisible by {shards} shards")
+    Fl = F // shards
+    idx = []
+    for s in range(shards):
+        idx.extend(range(s * Fl, (s + 1) * Fl))
+        idx.extend(range(F + s * Fl, F + (s + 1) * Fl))
+    return np.asarray(idx, np.int32)
+
+
+def tp_permute_qkv(w, H: int, Hkv: int, D: int, shards: int):
+    """Shard-major column order for a fused QKV weight (last axis; works
+    for layer-stacked ``(L, d, N)`` leaves too)."""
+    import jax.numpy as jnp
+    return jnp.take(w, tp_qkv_permutation(H, Hkv, D, shards), axis=-1)
+
+
+def tp_permute_gated_ffn(w, F: int, shards: int):
+    """Per-shard [gate_s|up_s] column order for a gated FFN in-projection."""
+    import jax.numpy as jnp
+    return jnp.take(w, tp_gated_ffn_permutation(F, shards), axis=-1)
+
+
+def tp_param_pspec(name: str, ndim: int, axis: str = "model") -> P:
+    """PartitionSpec for one serve param leaf under head-sharded TP.
+    ``name`` is the leaf's key in the param tree; anything not explicitly
+    sharded (norm scales, embeddings, the head) replicates."""
+    if name in _TP_COL_SHARDED:
+        return P(*([None] * (ndim - 1) + [axis]))
+    if name in _TP_ROW_SHARDED:
+        return P(*([None] * (ndim - 2) + [axis, None]))
+    return P()
+
+
+def tp_cache_pspec(name: str, ndim: int, axis: str = "model") -> P:
+    """PartitionSpec for a KV-cache leaf: k/v shard their head axis (-2,
+    both for contiguous ``(B,S,Hkv,D)`` / stacked ``(L,B,S,Hkv,D)`` leaves
+    and for the paged ``(blocks,bs,Hkv,D)`` arena); positions and block
+    tables replicate — the per-slot ``(B,)`` position contract and the
+    slot manager are shard-invariant."""
+    if name in ("k", "v"):
+        return P(*([None] * (ndim - 2) + [axis, None]))
+    return P()

@@ -116,6 +116,19 @@ def main(argv=None):
     ap.add_argument("--kv-snapshot", default=None, metavar="PATH",
                     help="write the final KVPool snapshot as JSON "
                          "(inspect with: python -m repro.tools kv-inspect)")
+    ap.add_argument("--mesh-shape", type=int, default=0, metavar="N",
+                    help="tensor-parallel serve: run the executed decode "
+                         "program under shard_map on an N-device 1-D mesh "
+                         "(head-sharded QKV/FFN + KV cache; requires "
+                         "--plan-fusion and N local devices — on CPU set "
+                         "XLA_FLAGS=--xla_force_host_platform_device_count)")
+    ap.add_argument("--shard-axis", default="model",
+                    help="mesh axis name the sharded leaves partition over "
+                         "(default: model)")
+    ap.add_argument("--expect-sharded-parity", action="store_true",
+                    help="also serve the same trace on a single device and "
+                         "fail unless every token stream matches — the CI "
+                         "multi-device smoke gate")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--plan-fusion", action="store_true",
                     help="plan the decode-step fusion bundle "
@@ -135,11 +148,29 @@ def main(argv=None):
             or args.expect_prefix_hits or args.kv_snapshot):
         ap.error("--kv-blocks/--kv-slot-blocks/--expect-prefix-hits/"
                  "--kv-snapshot require --kv-block-size > 0")
+    if args.mesh_shape > 1 and not args.plan_fusion:
+        ap.error("--mesh-shape requires --plan-fusion (only the executed "
+                 "continuous step runs under shard_map)")
+    if args.expect_sharded_parity and args.mesh_shape <= 1:
+        ap.error("--expect-sharded-parity requires --mesh-shape > 1")
 
     cfg = get_config(args.arch)
     if args.scale == "smoke":
         cfg = cfg.reduced()
     params = lm.init(cfg, jax.random.PRNGKey(0))
+    mesh = None
+    if args.mesh_shape > 1:
+        from jax.sharding import Mesh
+        devs = jax.devices()
+        if len(devs) < args.mesh_shape:
+            raise SystemExit(
+                f"[sharded] FAIL: --mesh-shape {args.mesh_shape} needs that "
+                f"many local devices, found {len(devs)} (on CPU set "
+                "XLA_FLAGS=--xla_force_host_platform_device_count="
+                f"{args.mesh_shape})")
+        mesh = Mesh(np.array(devs)[:args.mesh_shape], (args.shard_axis,))
+        print(f"[sharded] {args.mesh_shape}-way tensor-parallel serve over "
+              f"mesh axis {args.shard_axis!r}")
     measure = None
     schedule_cache = None
     if args.plan_fusion:
@@ -161,7 +192,8 @@ def main(argv=None):
                          paged_kv=args.kv_block_size > 0,
                          kv_block_size=args.kv_block_size or 16,
                          kv_blocks=args.kv_blocks,
-                         kv_slot_blocks=args.kv_slot_blocks)
+                         kv_slot_blocks=args.kv_slot_blocks,
+                         mesh=mesh, shard_axis=args.shard_axis)
     if engine.fusion_plan is not None:
         print("[plan-fusion] decode-step bundles:")
         for row in engine.fusion_plan.summary():
@@ -190,6 +222,24 @@ def main(argv=None):
     total_new = sum(len(r.out_tokens) for r in reqs)
     print(f"served {len(reqs)} requests, {total_new} tokens "
           f"in {dt:.2f}s ({total_new / dt:.1f} tok/s)")
+    if args.expect_sharded_parity:
+        # same deterministic trace on one device; every stream must match
+        ref_engine = ServeEngine(
+            cfg, params, batch=args.batch,
+            max_len=args.prompt_len + args.shared_prefix + args.stagger
+            + args.max_new + 8,
+            plan_fusion=args.plan_fusion, schedule_cache=schedule_cache,
+            scheduling=args.scheduling, prefill_budget=budget,
+            reject_overlong=args.reject_overlong)
+        ref = build_requests(cfg, args)
+        ref_engine.run(ref)
+        bad = [r.rid for r, s in zip(ref, reqs)
+               if r.out_tokens != s.out_tokens]
+        if bad:
+            raise SystemExit("[sharded] FAIL: sharded token streams "
+                             f"diverge from single-device for rids {bad}")
+        print(f"[sharded] token-for-token parity with single-device "
+              f"across {len(reqs)} requests")
     if args.scheduling == "continuous":
         st = engine.stats
         print(f"[slots] {st.describe()}")

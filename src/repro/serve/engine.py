@@ -216,8 +216,8 @@ def executable_decode_supported(cfg: ModelConfig) -> Optional[str]:
     runs = lm.layer_runs(cfg)
     if cfg.frontend != "none":
         return f"frontend {cfg.frontend!r} (token frontend only)"
-    if len(runs) != 1 or runs[0].count != 1 or runs[0].kind != ATTN:
-        return "needs a single unstacked global-attention layer run"
+    if len(runs) != 1 or runs[0].kind != ATTN:
+        return "needs a single global-attention layer run"
     if cfg.is_moe:
         return "MoE FFN dispatch not yet routed through the executor"
     if cfg.norm != "rmsnorm":
@@ -273,7 +273,8 @@ class ServeEngine:
                  stitch_epilogues: bool = True,
                  paged_kv: bool = False, kv_block_size: int = 16,
                  kv_slot_blocks: Optional[int] = None,
-                 kv_blocks: Optional[int] = None):
+                 kv_blocks: Optional[int] = None,
+                 mesh=None, shard_axis: str = "model"):
         if scheduling not in ("continuous", "wavefront"):
             raise ValueError(f"scheduling {scheduling!r} "
                              "(continuous or wavefront)")
@@ -282,6 +283,38 @@ class ServeEngine:
         self.batch = batch
         self.max_len = max_len
         self.scheduling = scheduling
+        # tensor-parallel serve: with a mesh whose ``shard_axis`` has
+        # extent n > 1, the executed continuous step runs under
+        # compat.shard_map — each shard owns num_heads/n query heads,
+        # num_kv_heads/n KV-cache heads and d_ff/n FFN columns, plans its
+        # own shard-local fusion, and psums the two row-sharded output
+        # projections.  The slot manager, the per-slot (B,) position
+        # contract and every sampled token stay shard-replicated.
+        self.mesh = mesh
+        self.shard_axis = shard_axis
+        self.tp_shards = 1
+        if mesh is not None and dict(mesh.shape).get(shard_axis, 1) > 1:
+            n_tp = int(dict(mesh.shape)[shard_axis])
+            if scheduling != "continuous" or not plan_fusion:
+                raise ValueError(
+                    "tensor-parallel serve requires scheduling='continuous' "
+                    "and plan_fusion=True (only the executed continuous "
+                    "step runs under shard_map)")
+            reason = executable_decode_supported(cfg)
+            if reason is not None:
+                raise ValueError("tensor-parallel serve: config not "
+                                 f"executor-supported ({reason})")
+            for what, dim in (("num_heads", cfg.num_heads),
+                              ("num_kv_heads", cfg.num_kv_heads),
+                              ("d_ff", cfg.d_ff)):
+                if dim % n_tp:
+                    raise ValueError(
+                        f"tensor-parallel serve: {what}={dim} is not "
+                        f"divisible by mesh axis {shard_axis!r} extent "
+                        f"{n_tp}")
+            self.tp_shards = n_tp
+        self._mesh_tag = (f"{shard_axis}:{self.tp_shards}"
+                          if self.tp_shards > 1 else "")
         self.paged_kv = paged_kv
         self.kv_pool = None
         if paged_kv:
@@ -293,6 +326,9 @@ class ServeEngine:
                                  "and plan_fusion=True (the paged kernels "
                                  "run only on the executed chunked path)")
             reason = executable_decode_supported(cfg)
+            if reason is None and lm.layer_runs(cfg)[0].count > 1:
+                reason = ("the paged arena is single-layer — stacked runs "
+                          "serve from the contiguous cache")
             if reason is not None:
                 raise ValueError(f"paged_kv: config not executor-supported "
                                  f"({reason}) — the vmapped fallback has no "
@@ -350,9 +386,20 @@ class ServeEngine:
         self._cb_decode = None                      # generic vmapped fallback
         self._refill_write = None
         self.stats = ServeStats(batch=batch)
+        # the executed continuous step decodes with _step_params: the plain
+        # params single-device, the shard-major-permuted copy under TP (see
+        # _tp_permuted_params — shard_map's even last-axis split then hands
+        # each shard a self-consistent [q_s|k_s|v_s] / [gate_s|up_s] slab)
+        self._step_params = params
+        if self.tp_shards > 1:
+            self._step_params = self._tp_permuted_params()
         self.fusion_plan = None
         if plan_fusion:
             reason = executable_decode_supported(cfg)
+            if reason is None and scheduling == "wavefront" \
+                    and lm.layer_runs(cfg)[0].count > 1:
+                reason = ("stacked layer runs execute on the continuous "
+                          "path only (wavefront keeps the hand-wired step)")
             if reason is None:
                 # the executed decode program indexes the cache by the
                 # planned (128-aligned) length; ``cache_len`` exposes it —
@@ -433,6 +480,13 @@ class ServeEngine:
         cfg = self.cfg
         d, H, Hkv = cfg.d_model, cfg.num_heads, cfg.num_kv_heads
         D = cfg.resolved_head_dim
+        # tensor-parallel: the graph the planner sees is ONE SHARD's —
+        # local head counts and local FFN width.  d_model (activations)
+        # stays replicated, so every row dimension is unchanged.
+        tp = getattr(self, "tp_shards", 1)
+        H, Hkv = H // tp, Hkv // tp
+        ffn_in = _ffn_in_width(cfg) // tp
+        ffn_out = cfg.d_ff // tp
         dt = jnp.dtype(cfg.dtype)
         paged = getattr(self, "paged_kv", False)
         # paged: S is the per-slot LOGICAL capacity spanned by the block
@@ -457,7 +511,7 @@ class ServeEngine:
         # FFN in-projection — weight streaming dominates at serving batch
         # (memory-bound; the honest fig_framework finding), so the planner
         # pairs it with the prefill chunk's genuinely compute-bound matmul.
-        proj = matmul_1d_op(M=B, K=d, N=_ffn_in_width(cfg), dtype=dt, bm=B)
+        proj = matmul_1d_op(M=B, K=d, N=ffn_in, dtype=dt, bm=B)
         proj = dataclasses.replace(
             proj, name="moe_router" if cfg.moe is not None else "ffn_proj")
         executable = executable_decode_supported(cfg) is None
@@ -475,7 +529,7 @@ class ServeEngine:
                       "gelu_mlp": elementwise.gelu_plain,
                       "relu2_mlp": elementwise.relu2}[cfg.activation]
             act = elementwise.activation_op(
-                R=B, F_in=_ffn_in_width(cfg), F_out=cfg.d_ff, fn=act_fn,
+                R=B, F_in=ffn_in, F_out=ffn_out, fn=act_fn,
                 dtype=dt, bm=B, name="decode_act")
             if getattr(self, "stitch_epilogues", True):
                 norm1 = dataclasses.replace(norm1,
@@ -547,7 +601,8 @@ class ServeEngine:
             max_ways = 2 + n                 # {att, chunk_0..chunk_{n-1}} +1
         graph = self.decode_graph(budget=budget, prefill_chunks=n)
         return planner.plan(graph, max_ways=max_ways, measure=measure,
-                            cache=cache)
+                            cache=cache,
+                            mesh_tag=getattr(self, "_mesh_tag", ""))
 
     # ------------------------------------------------------------------
     # Executed decode step: plan -> program -> live slot state
@@ -586,6 +641,13 @@ class ServeEngine:
             interpret = jax.default_backend() != "tpu"
         d, H, Hkv = cfg.d_model, cfg.num_heads, cfg.num_kv_heads
         D = cfg.resolved_head_dim
+        # tensor-parallel: the program is traced once and runs SPMD inside
+        # shard_map — all head splits below are shard-local, the weight
+        # state leaves arrive as shards, and the two row-sharded output
+        # projections psum their partial products across ``shard_axis``
+        tp = getattr(self, "tp_shards", 1)
+        axis = getattr(self, "shard_axis", "model")
+        H, Hkv = H // tp, Hkv // tp
         dt = jnp.dtype(cfg.dtype)
         B = self.batch
 
@@ -598,7 +660,8 @@ class ServeEngine:
         plan = planner.plan(graph, max_ways=max(3, 2 + prefill_chunks),
                             allow_same_bound=True,
                             measure=self._measure,
-                            cache=self._schedule_cache)
+                            cache=self._schedule_cache,
+                            mesh_tag=getattr(self, "_mesh_tag", ""))
 
         paged = getattr(self, "paged_kv", False)
         bs = self.kv_block_size if paged else 0
@@ -640,12 +703,16 @@ class ServeEngine:
 
         def att_put(state, o):
             attn_out = o.astype(dt).reshape(B, H * D) @ state["w_o"]
+            if tp > 1:          # row-sharded W_o: sum the partial products
+                attn_out = jax.lax.psum(attn_out, axis)
             state = dict(state)
             state["h_mid"] = state["x"] + attn_out              # residual 1
             return state
 
         def act_put(state, h_act):
             ff = h_act.astype(dt) @ state["w_out"]
+            if tp > 1:          # row-sharded W_out: sum the partial products
+                ff = jax.lax.psum(ff, axis)
             state = dict(state)
             state["x_out"] = state["h_mid"] + ff                # residual 2
             return state
@@ -714,20 +781,82 @@ class ServeEngine:
                               "l": f"pf{i}_l"})
         return executor.compile_plan(plan, bindings=reg, interpret=interpret)
 
-    def _slot_state(self, params, cache, x, pos, act):
-        """State pytree for the executed program; ``pos`` is the per-slot
-        position vector (B,), ``act`` the per-slot decoding mask (B,) bool
-        gating the decode k/v scatter."""
-        run = lm.layer_runs(self.cfg)[0]
-        p = params[run.name]
+    def _layer_state(self, p, kv, x, pos, act):
+        """State pytree for ONE layer of the executed program: ``p`` is the
+        layer's block params, ``kv`` its ``{"k", "v"}`` cache leaves (the
+        scan over stacked runs feeds per-layer slices of both); ``pos`` is
+        the per-slot position vector (B,), ``act`` the per-slot decoding
+        mask (B,) bool gating the decode k/v scatter."""
         return {
             "x": x, "pos": pos, "act": act,
             "norm1_scale": p["norm1"]["scale"].reshape(1, -1),
             "norm2_scale": p["norm2"]["scale"].reshape(1, -1),
             "w_qkv": p["attn"]["w_qkv"], "w_o": p["attn"]["w_o"],
             "w_in": p["mlp"]["w_in"], "w_out": p["mlp"]["w_out"],
-            "k_cache": cache[run.name]["k"], "v_cache": cache[run.name]["v"],
+            "k_cache": kv["k"], "v_cache": kv["v"],
         }
+
+    def _slot_state(self, params, cache, x, pos, act):
+        """Single-layer form of ``_layer_state`` over the full param/cache
+        trees (the wavefront path and unstacked configs)."""
+        run = lm.layer_runs(self.cfg)[0]
+        return self._layer_state(params[run.name], cache[run.name],
+                                 x, pos, act)
+
+    # ------------------------------------------------------------------
+    # Tensor parallelism: shard-major weight layout + shard_map specs
+    # ------------------------------------------------------------------
+    def _tp_permuted_params(self):
+        """Params copy whose fused column-sharded weights are permuted to
+        shard-major order (distributed/sharding.py): w_qkv's [q|k|v] column
+        blocks become per-shard [q_s|k_s|v_s], a gated w_in's [gate|up]
+        becomes per-shard [gate_s|up_s] — shard_map's even last-axis split
+        then hands every shard a slab the unmodified head-split and
+        gate-split glue consumes directly.  Row-sharded weights (w_o,
+        w_out) and everything replicated pass through untouched."""
+        from repro.distributed import sharding as shd
+        cfg = self.cfg
+        run = lm.layer_runs(cfg)[0]
+        p = dict(self.params)
+        blk = dict(p[run.name])
+        attn = dict(blk["attn"])
+        attn["w_qkv"] = shd.tp_permute_qkv(
+            attn["w_qkv"], cfg.num_heads, cfg.num_kv_heads,
+            cfg.resolved_head_dim, self.tp_shards)
+        blk["attn"] = attn
+        if cfg.activation in ("silu", "gelu"):
+            mlp = dict(blk["mlp"])
+            mlp["w_in"] = shd.tp_permute_gated_ffn(
+                mlp["w_in"], cfg.d_ff, self.tp_shards)
+            blk["mlp"] = mlp
+        p[run.name] = blk
+        return p
+
+    def _tp_specs(self, n_chunks: int):
+        """(in_specs, out_specs) for shard_map around the continuous step:
+        weight and KV-cache leaves shard by name (sharding.tp_param_pspec /
+        tp_cache_pspec), everything the slot manager owns — tokens, masks,
+        positions, chunk metadata, block tables — replicates."""
+        from jax.sharding import PartitionSpec as P
+        from jax.tree_util import tree_map_with_path
+        from repro.distributed import sharding as shd
+        axis = self.shard_axis
+
+        p_specs = tree_map_with_path(
+            lambda path, leaf: shd.tp_param_pspec(path[-1].key,
+                                                  jnp.ndim(leaf), axis),
+            self._step_params)
+        c_specs = tree_map_with_path(
+            lambda path, leaf: shd.tp_cache_pspec(path[-1].key,
+                                                  jnp.ndim(leaf), axis),
+            jax.eval_shape(self._init_slot_cache))
+        in_specs = (p_specs, c_specs, P(), P())
+        if getattr(self, "paged_kv", False):
+            in_specs += (P(),)
+        if n_chunks:
+            in_specs += (P(), P(), P(), P())
+        out_specs = (P(), c_specs) + ((P(),) if n_chunks else ())
+        return in_specs, out_specs
 
     def _wave_state(self, params, cache, x):
         """Wavefront form: the scalar wave position broadcasts into the
@@ -931,14 +1060,30 @@ class ServeEngine:
         attention shares the decode launch (the steady mixed
         prefill⊕decode bundle), and the chunk's FFN + residuals finish
         after the program.  The final chunk's last valid row yields the
-        request's first-token logits."""
+        request's first-token logits.
+
+        Stacked configs (one ATTN run with ``count > 1``) scan the
+        per-layer body over the layer-stacked param/cache leaves — the
+        program runs once per layer inside ``lax.scan``, carrying the
+        decode hidden (B, d) and each chunk's (C, d) hidden between
+        layers.  Under tensor parallelism the whole step body runs inside
+        ``compat.shard_map``: every shard executes its own shard-local
+        fused program, the output projections psum, and logits/positions
+        come out replicated."""
         from repro.models import layers
+        from repro.runtime_flags import maybe_scan
 
         cfg = self.cfg
         B, d = self.batch, cfg.d_model
         run = lm.layer_runs(cfg)[0]
+        L = run.count
         dt = jnp.dtype(cfg.dtype)
         n = n_chunks
+        tp = self.tp_shards
+        axis = self.shard_axis
+        H_l = cfg.num_heads // tp
+        Hkv_l = cfg.num_kv_heads // tp
+        D = cfg.resolved_head_dim
         paged = getattr(self, "paged_kv", False)
         bs = self.kv_block_size if paged else 0
         C = self.prefill_budget.effective_chunk(
@@ -960,28 +1105,35 @@ class ServeEngine:
             "steps": program.describe(),
         }
 
-        def step(params, cache, tokens, active, bt=None,
-                 ch_slots=None, ch_offs=None, ch_valid=None, ch_tokens=None):
-            p = params[run.name]
-            x = layers.embed_onehot(params["embed"], tokens[:, None], d)
-            state = self._slot_state(params, cache, x[:, 0], cache["pos"],
-                                     active)
+        def layer_step(p, kv, x, pos, act, bt, chs, ch_slots, ch_offs):
+            """One transformer layer over the whole slot state: the decode
+            step for all B slots plus the riding chunks' pre/post-work.
+            ``chs`` is the tuple of per-chunk (C, d) hiddens this layer
+            consumes and reproduces (the scan carry)."""
+            state = self._layer_state(p, kv, x, pos, act)
             if paged:
                 state["bt"] = bt              # (B, max_blocks) int32 tables
 
-            # chunk pre-work: embed + norm + QKV + RoPE at absolute chunk
+            # chunk pre-work: norm + QKV + RoPE at absolute chunk
             # positions, then land the chunk's k/v in its slot's cache rows
             # BEFORE the program (the prefill kernel only reads the cache).
-            # Paged: chunk offsets are chunk-aligned (admission floors
-            # prefix reuse to whole chunks), so the chunk covers exactly
-            # C // bs whole pages — gather their arena blocks from the
-            # slot's table row and scatter page by page.
+            # The QKV split uses shard-local head counts — under TP the
+            # weight slab arrives permuted to [q_s|k_s|v_s], so the plain
+            # contiguous slicing below is exactly layers.qkv_project on
+            # this shard's heads.  Paged: chunk offsets are chunk-aligned
+            # (admission floors prefix reuse to whole chunks), so the
+            # chunk covers exactly C // bs whole pages — gather their
+            # arena blocks from the slot's table row and scatter page by
+            # page.
             kc, vc = state["k_cache"], state["v_cache"]
             for i in range(n):
-                xp, _ = lm._embed_inputs(cfg, params,
-                                         {"tokens": ch_tokens[i][None]})
+                xp = chs[i][None]                              # (1, C, d)
                 hp = layers.apply_norm(cfg, p["norm1"], xp)
-                qp, kp, vp = layers.qkv_project(cfg, p["attn"], hp)
+                qkv = hp @ p["attn"]["w_qkv"]
+                qp = qkv[..., :H_l * D].reshape(1, C, H_l, D)
+                kp = qkv[..., H_l * D:(H_l + Hkv_l) * D] \
+                    .reshape(1, C, Hkv_l, D)
+                vp = qkv[..., (H_l + Hkv_l) * D:].reshape(1, C, Hkv_l, D)
                 positions = ch_offs[i] + jnp.arange(C)[None, :]
                 qp = layers.rope(qp, positions, cfg.rope_theta,
                                  cfg.rope_fraction)
@@ -1003,7 +1155,6 @@ class ServeEngine:
                         vc, vp.astype(vc.dtype),
                         (ch_slots[i], ch_offs[i], 0, 0))
                 state[f"pf{i}_q"] = qp[0].astype(dt)
-                state[f"pf{i}_x"] = xp[0]
                 state[f"pf{i}_slot"] = ch_slots[i]
                 state[f"pf{i}_off"] = jnp.reshape(ch_offs[i],
                                                   (1, 1)).astype(jnp.int32)
@@ -1011,28 +1162,68 @@ class ServeEngine:
 
             state = program(state)
 
+            # chunk post-work: W_o + residual, norm2 + MLP + residual —
+            # the chunk leaves this layer as its next (C, d) hidden.
+            # Under TP both output projections are row-sharded partials.
+            new_chs = []
+            for i in range(n):
+                o = state[f"pf{i}_o"].astype(dt)             # (C, H_l, D)
+                attn_out = o.reshape(C, -1) @ p["attn"]["w_o"]
+                if tp > 1:
+                    attn_out = jax.lax.psum(attn_out, axis)
+                xm = chs[i] + attn_out
+                h2 = layers.apply_norm(cfg, p["norm2"], xm[None])[0]
+                ff = _mlp_from_h(cfg, h2 @ p["mlp"]["w_in"],
+                                 p["mlp"]["w_out"])
+                if tp > 1:
+                    ff = jax.lax.psum(ff, axis)
+                new_chs.append(xm + ff)
+            return (state["x_out"],
+                    {"k": state["k_cache"], "v": state["v_cache"]},
+                    tuple(new_chs))
+
+        def core(params, cache, tokens, active, *rest):
+            rest = list(rest)
+            bt = rest.pop(0) if paged else None
+            ch_slots = ch_offs = ch_valid = ch_tokens = None
+            if n:
+                ch_slots, ch_offs, ch_valid, ch_tokens = rest
+            x = layers.embed_onehot(params["embed"], tokens[:, None], d)
+            chs = tuple(
+                lm._embed_inputs(cfg, params,
+                                 {"tokens": ch_tokens[i][None]})[0][0]
+                for i in range(n))
+            pos = cache["pos"]
+            if L == 1:
+                x1, kv_new, chs = layer_step(
+                    params[run.name], cache[run.name], x[:, 0], pos,
+                    active, bt, chs, ch_slots, ch_offs)
+            else:
+                def body(carry, xs):
+                    xc, chc = carry
+                    p_l, kv_l = xs
+                    xn, kv_out, chn = layer_step(p_l, kv_l, xc, pos,
+                                                 active, bt, chc,
+                                                 ch_slots, ch_offs)
+                    return (xn, chn), kv_out
+                (x1, chs), kv_new = maybe_scan(
+                    body, (x[:, 0], chs),
+                    (params[run.name], cache[run.name]), length=L)
+
             xf = layers.apply_norm(cfg, params["final_norm"],
-                                   state["x_out"][:, None, :].astype(x.dtype))
+                                   x1[:, None, :].astype(x.dtype))
             logits = lm._head(cfg, params, xf)[:, 0]
-            new_pos = jnp.where(active, cache["pos"] + 1, cache["pos"])
-            new_cache = {"pos": new_pos,
-                         run.name: {"k": state["k_cache"],
-                                    "v": state["v_cache"]}}
+            new_pos = jnp.where(active, pos + 1, pos)
+            new_cache = {"pos": new_pos, run.name: kv_new}
             if not n:
                 return logits, new_cache
 
-            # chunk post-work: W_o + residual, norm2 + MLP + residual, and
             # the (possibly partial) chunk's last valid row -> first-token
             # logits; positions advance by the chunk's valid rows
             pf_logits = []
             for i in range(n):
-                o = state[f"pf{i}_o"].astype(dt)                 # (C, H, D)
-                attn_out = o.reshape(C, -1) @ p["attn"]["w_o"]
-                xm = state[f"pf{i}_x"] + attn_out
-                h2 = layers.apply_norm(cfg, p["norm2"], xm[None])
-                ff = layers.mlp(cfg, p["mlp"], h2)[0]
-                xop = xm + ff
-                xlast = jax.lax.dynamic_slice_in_dim(xop, ch_valid[i] - 1, 1)
+                xlast = jax.lax.dynamic_slice_in_dim(chs[i],
+                                                     ch_valid[i] - 1, 1)
                 xfp = layers.apply_norm(cfg, params["final_norm"],
                                         xlast[None])
                 pf_logits.append(lm._head(cfg, params, xfp)[0, 0])
@@ -1040,6 +1231,27 @@ class ServeEngine:
                                                       + ch_valid[i])
             new_cache["pos"] = new_pos
             return logits, new_cache, jnp.stack(pf_logits)
+
+        if tp > 1:
+            from repro.distributed.compat import shard_map
+            in_specs, out_specs = self._tp_specs(n)
+            # fully-manual SPMD: every shard traces the same program over
+            # its slab; logits come out replicated (both projections psum
+            # before anything data-dependent), so sampling stays host-side
+            # and shard-invariant.  check_vma=False: the 0.4.x fallback
+            # cannot prove replication through the Pallas calls.
+            core = shard_map(core, mesh=self.mesh, in_specs=in_specs,
+                             out_specs=out_specs, axis_names=(axis,),
+                             check_vma=False)
+
+        def step(params, cache, tokens, active, bt=None,
+                 ch_slots=None, ch_offs=None, ch_valid=None, ch_tokens=None):
+            args = (params, cache, tokens, active)
+            if paged:
+                args += (bt,)
+            if n:
+                args += (ch_slots, ch_offs, ch_valid, ch_tokens)
+            return core(*args)
 
         return step
 
@@ -1286,7 +1498,7 @@ class ServeEngine:
                         pref[b]["req"].prompt[off:off + ch_valid[j]],
                         np.int32)
                 logits, cache, pf_logits = self._cb_step(n)(
-                    self.params, cache, jnp.asarray(last),
+                    self._step_params, cache, jnp.asarray(last),
                     jnp.asarray(active),
                     *((bt_dev,) if paged else ()),
                     ch_slots=jnp.asarray(np.asarray(sel, np.int32)),
@@ -1297,7 +1509,7 @@ class ServeEngine:
                     ch_tokens=jnp.asarray(ch_tok))
             else:
                 logits, cache = self._cb_step(0)(
-                    self.params, cache, jnp.asarray(last),
+                    self._step_params, cache, jnp.asarray(last),
                     jnp.asarray(active),
                     *((bt_dev,) if paged else ()))
 

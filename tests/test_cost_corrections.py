@@ -1,0 +1,162 @@
+"""Fitted cost-model corrections: the per-op-class table distilled from
+the CI benchmark trajectory (``repro.tools fit-cost``) multiplies each
+op's roofline terms — clamped, median-of-history, and OFF by default
+(with no table loaded the model is bit-identical to the analytic one)."""
+import json
+
+import pytest
+
+from repro import tools
+from repro.core import cost_model as cm
+from repro.core.op_spec import OpSpec
+
+
+@pytest.fixture(autouse=True)
+def _clean_table():
+    """Every test starts and ends with no correction table installed and
+    the env-load latch reset (so REPRO_COST_CORRECTIONS tests can probe
+    the lazy path)."""
+    cm._corrections = None
+    cm._corrections_env_loaded = False
+    yield
+    cm._corrections = None
+    cm._corrections_env_loaded = False
+
+
+def _op(name, flops=4e9, hbm=2e9, grid=8):
+    return OpSpec(name=name, grid=grid, body=None, inputs=(), outputs=(),
+                  flops=flops, hbm_bytes=hbm)
+
+
+# ---------------------------------------------------------------------------
+# op_class: shape/index parameters stripped, classes stable across shapes
+# ---------------------------------------------------------------------------
+def test_op_class_strips_shape_params():
+    assert cm.op_class("decode_attn_B2_S128_H4kv4") == "decode_attn"
+    assert cm.op_class("decode_attn_B3_S256_H8kv2") == "decode_attn"
+    assert cm.op_class("prefill_attn0_C8_S128_H4kv4_pg16") == "prefill_attn"
+    assert cm.op_class("prefill_attn1_C16_S128_H1kv1") == "prefill_attn"
+    assert cm.op_class("matmul_2x64x256") == "matmul"
+    assert cm.op_class("rmsnorm_256x64") == "rmsnorm"
+    assert cm.op_class("adamw_t0_256x128") == "adamw"
+    # index-suffixed serve ops merge (norm1/norm2 share one class)
+    assert cm.op_class("decode_norm1") == cm.op_class("decode_norm2") \
+        == "decode_norm"
+    # paper-suite names survive untouched (no parameter segments)
+    for n in ("maxpool", "upsample", "bnstats", "hist", "ethash_like",
+              "sha_like", "blake_like", "blake2b_like", "qkv_proj",
+              "ffn_proj", "decode_act"):
+        assert cm.op_class(n) == n
+    # a name that normalizes to nothing falls back to itself
+    assert cm.op_class("im2col") == "im2col"
+
+
+def test_op_class_chains_normalize_per_member():
+    chain = "decode_norm1" + "→" + "qkv_proj"
+    assert cm.op_class(chain) == "decode_norm→qkv_proj"
+    assert cm.op_class("ffn_proj→decode_act") == "ffn_proj→decode_act"
+
+
+# ---------------------------------------------------------------------------
+# default OFF: no table -> factor 1.0 -> analytic model unchanged
+# ---------------------------------------------------------------------------
+def test_default_off_is_identity(monkeypatch):
+    monkeypatch.delenv("REPRO_COST_CORRECTIONS", raising=False)
+    assert cm.correction_for("decode_attn_B2_S128_H4kv4") == 1.0
+    op = _op("decode_attn_B2_S128_H4kv4")
+    ramp = (op.t_compute + op.t_memory) / op.grid
+    assert cm.native_time(op) == max(op.t_compute, op.t_memory) + ramp \
+        + cm.LAUNCH_S
+
+
+def test_corrections_scale_native_and_fused_times():
+    a, b = _op("decode_attn_B2_S128_H4kv4", flops=1e9, hbm=8e9), \
+        _op("qkv_proj", flops=8e9, hbm=1e9)
+    base_a = cm.native_time(a)
+    base_fused = cm.hfused_cost((a, b), cm.Schedule(1, 1)).t_hfused
+    cm.set_corrections({"classes": {"decode_attn": {"correction": 1.5}}})
+    # native: the roofline+ramp part scales, the launch constant does not
+    assert cm.native_time(a) == pytest.approx(
+        (base_a - cm.LAUNCH_S) * 1.5 + cm.LAUNCH_S)
+    assert cm.native_time(b) == pytest.approx(cm.native_time(b))
+    # fused: the corrected member's engine terms grow, so the bundle slows
+    assert cm.hfused_cost((a, b), cm.Schedule(1, 1)).t_hfused > base_fused
+
+
+def test_correction_clamped_on_lookup():
+    cm.set_corrections({"wild_low": 0.01, "wild_high": 50.0, "mild": 1.2})
+    lo, hi = cm.CORRECTION_CLAMP
+    assert cm.correction_for("wild_low") == lo
+    assert cm.correction_for("wild_high") == hi
+    assert cm.correction_for("mild") == pytest.approx(1.2)
+    assert cm.correction_for("unknown_class") == 1.0
+
+
+def test_env_path_loads_table_lazily(tmp_path, monkeypatch):
+    p = tmp_path / "corr.json"
+    p.write_text(json.dumps(
+        {"classes": {"decode_attn": {"correction": 1.25, "n": 3}}}))
+    monkeypatch.setenv("REPRO_COST_CORRECTIONS", str(p))
+    assert cm.correction_for("decode_attn_B9_S128_H2kv2") == 1.25
+    # a broken path degrades to the analytic model, never raises
+    cm._corrections = None
+    cm._corrections_env_loaded = False
+    monkeypatch.setenv("REPRO_COST_CORRECTIONS", str(tmp_path / "nope.json"))
+    assert cm.correction_for("decode_attn_B9_S128_H2kv2") == 1.0
+
+
+# ---------------------------------------------------------------------------
+# the fit-cost tool: history files -> clamped median table -> loadable
+# ---------------------------------------------------------------------------
+def _history(tmp_path, reports):
+    d = tmp_path / "history"
+    d.mkdir()
+    for i, rows in enumerate(reports):
+        (d / f"BENCH_measured_interpret_{i:08x}.json").write_text(
+            json.dumps({"backend": "interpret", "rows": rows}))
+    (d / "BENCH_executed_interpret_deadbeef.json").write_text(
+        json.dumps({"rows": [{"bundle": "ignored",
+                              "fused_launches": 2}]}))   # no delta: skipped
+    return d
+
+
+def test_fit_cost_fits_clamped_medians(tmp_path, capsys):
+    hist = _history(tmp_path, [
+        [{"bundle": "maxpool+upsample+sha_like",
+          "cm_vs_measured_delta_pct": 20.0},
+         {"bundle": "ethash_like+hist", "cm_vs_measured_delta_pct": -80.0}],
+        [{"bundle": "maxpool+upsample+sha_like",
+          "cm_vs_measured_delta_pct": 40.0},
+         {"bundle": "maxpool+hist", "cm_vs_measured_delta_pct": None}],
+    ])
+    out = tmp_path / "corr.json"
+    rc = tools.main(["fit-cost", "--history", str(hist),
+                     "--out", str(out), "--json"])
+    assert rc == 0
+    table = json.loads(out.read_text())
+    assert table == json.loads(capsys.readouterr().out)
+    # maxpool saw deltas (20, 40): median 30% -> x1.3
+    assert table["classes"]["maxpool"]["correction"] == pytest.approx(1.3)
+    assert table["classes"]["maxpool"]["n"] == 2
+    assert table["classes"]["sha_like"]["correction"] == pytest.approx(1.3)
+    # -80% would be x0.2: clamped to the floor
+    assert table["classes"]["ethash_like"]["correction"] == \
+        cm.CORRECTION_CLAMP[0]
+    # the None-delta row and the executed-report file contributed nothing
+    assert "ignored" not in table["classes"]
+    assert table["rows"] == 3
+    # the written table is exactly what set_corrections accepts
+    cm.set_corrections(table)
+    assert cm.correction_for("maxpool") == pytest.approx(1.3)
+
+
+def test_fit_cost_empty_history_yields_inert_table(tmp_path):
+    hist = tmp_path / "empty"
+    hist.mkdir()
+    out = tmp_path / "corr.json"
+    assert tools.main(["fit-cost", "--history", str(hist),
+                       "--out", str(out)]) == 0
+    table = json.loads(out.read_text())
+    assert table["classes"] == {} and table["rows"] == 0
+    cm.set_corrections(table)
+    assert cm.correction_for("anything") == 1.0

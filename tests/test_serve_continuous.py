@@ -216,6 +216,49 @@ def test_continuous_replan_zero_searches(setup, tmp_path):
     assert [r.out_tokens for r in r2] == [r.out_tokens for r in rw]
 
 
+def test_stacked_layers_executed_matches_oracle():
+    """A 2-layer stacked config (one ATTN run, count=2) now runs the
+    executed continuous path — the per-layer program scans over the
+    layer-stacked param/cache leaves — and stays token-for-token with the
+    wavefront oracle (which decodes through the hand-wired lm.decode_step
+    for stacked runs)."""
+    cfg = dataclasses.replace(_cfg(), num_layers=2,
+                              block_pattern=("attn", "attn"))
+    run = lm.layer_runs(cfg)[0]
+    assert run.count == 2
+    params = lm.init(cfg, jax.random.PRNGKey(0))
+    lens, budgets = PROMPT_SETS[0]
+    probe = _requests(cfg, lens, budgets)
+    wave = ServeEngine(cfg, params, batch=2, max_len=48,
+                       scheduling="wavefront")
+    wave.run(probe)
+    eos = probe[1].out_tokens[1]          # mid-batch EOS retirement too
+    rw = _requests(cfg, lens, budgets, eos=eos)
+    rc = _requests(cfg, lens, budgets, eos=eos)
+    wave.run(rw)
+    cont = ServeEngine(cfg, params, batch=2, max_len=48,
+                       scheduling="continuous", plan_fusion=True)
+    assert cont.executed, "stacked config must run the executed path"
+    cont.run(rc)
+    assert [r.out_tokens for r in rc] == [r.out_tokens for r in rw]
+    assert cont.stats.fused_mixed_steps > 0
+
+
+def test_stacked_layers_gated_off_wavefront_and_paged():
+    """The widened executable predicate keeps its two remaining fences:
+    the wavefront executed step and the paged arena stay single-layer."""
+    cfg = dataclasses.replace(_cfg(), num_layers=2,
+                              block_pattern=("attn", "attn"))
+    params = lm.init(cfg, jax.random.PRNGKey(0))
+    wave = ServeEngine(cfg, params, batch=2, max_len=48,
+                       scheduling="wavefront", plan_fusion=True)
+    assert not wave.executed
+    with pytest.raises(ValueError, match="single-layer"):
+        ServeEngine(cfg, params, batch=2, max_len=48,
+                    scheduling="continuous", plan_fusion=True,
+                    paged_kv=True)
+
+
 def test_stats_schema():
     st = ServeStats(batch=4)
     d = st.describe()
