@@ -23,3 +23,15 @@ def config() -> ModelConfig:
         moe=MoEConfig(num_experts=16, top_k=2, d_ff_expert=6400),
         source="[hf:microsoft/Phi-3.5-MoE-instruct; hf] 16 experts top-2",
     )
+
+
+@register("phi3.5-moe-rms")
+def config_rms() -> ModelConfig:
+    """Phi-3.5-MoE shape with RMSNorm — the MoE config the executed serve
+    path targets (the executor's norm kernel is rmsnorm-only, so the
+    faithful LayerNorm variant above still serves on the fallback).
+    ``reduced()`` of this config is the MoE serve smoke/CI model."""
+    import dataclasses
+    return dataclasses.replace(
+        config(), name="phi3.5-moe-rms", norm="rmsnorm",
+        source="phi3.5-moe-42b-a6.6b with rmsnorm (executed-serve variant)")

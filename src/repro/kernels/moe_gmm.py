@@ -53,8 +53,15 @@ def moe_gmm(xe, w_in, w_out, *, act: str = "silu", bc: int = 128,
 
 def moe_gmm_op(E: int, C: int, d: int, f: int, dtype=jnp.bfloat16,
                bc: int = 128, act: str = "silu", gated: bool = True) -> OpSpec:
-    """Fusible 1-D form: grid over (expert, token-block) linearized."""
-    assert C % bc == 0
+    """Fusible 1-D form: grid over (expert, token-block) linearized.
+
+    ``bc`` is clamped like ``moe_gmm`` does (min(bc, C)), then rounded
+    down to a divisor of C — a serving-scale capacity of 8 against the
+    default bc=128 builds a (1, 8, d) block instead of failing the
+    divisibility assert."""
+    bc = min(bc, C)
+    while C % bc:
+        bc -= 1
     nc = C // bc
     fin = 2 * f if gated else f
 
@@ -74,4 +81,5 @@ def moe_gmm_op(E: int, C: int, d: int, f: int, dtype=jnp.bfloat16,
                          lambda s: (s // nc, s % nc, 0)),),
         flops=2.0 * E * C * d * (fin + f),
         hbm_bytes=(2 * E * C * d + E * d * fin + E * f * d) * itemsize,
-        tag="framework:moe_gmm")
+        tag="framework:moe_gmm",
+        in_names=("xe", "w_in", "w_out"), out_names=("ye",))

@@ -82,11 +82,14 @@ def main(argv=None):
     ap.add_argument("--coresident-chunks", type=int, default=2,
                     help="prefill budget: max prefill chunks (distinct "
                          "slots) co-resident in one fused decode launch")
-    ap.add_argument("--prefill-policy", choices=["fifo", "srpf"],
+    ap.add_argument("--prefill-policy", choices=["fifo", "srpf", "eload"],
                     default="fifo",
                     help="chunk-ordering under contention: fifo = claim "
-                         "order; srpf = shortest-remaining-prefill-first "
-                         "(PrefillBudget.policy)")
+                         "order; srpf = shortest-remaining-prefill-first; "
+                         "eload = srpf + shed one coresident chunk while "
+                         "the per-expert hit skew exceeds the budget's "
+                         "threshold (MoE executed path; "
+                         "PrefillBudget.policy)")
     ap.add_argument("--reject-overlong", action="store_true",
                     help="reject prompts longer than --chunk-rows instead "
                          "of admitting them across iterations")
@@ -94,6 +97,11 @@ def main(argv=None):
                     help="fail unless the executed decode program carries "
                          ">=1 epilogue chain (core/stitch.py) inside a "
                          "fused launch — the CI hybrid-fusion smoke")
+    ap.add_argument("--expect-moe-fused", action="store_true",
+                    help="fail unless the executed decode program puts the "
+                         "grouped expert GMM (kernels/moe_gmm) in a fused "
+                         "launch with a co-resident partner — the CI MoE "
+                         "serve smoke")
     ap.add_argument("--kv-block-size", type=int, default=0,
                     help="paged KV: arena block size in tokens (0 = "
                          "contiguous per-slot cache; >0 enables the "
@@ -215,6 +223,23 @@ def main(argv=None):
             raise SystemExit("[stitch] FAIL: no epilogue chain in any "
                              "fused launch of the decode program")
         print(f"[stitch] chains in fused launches: {', '.join(chains)}")
+    if args.expect_moe_fused:
+        if cfg.moe is None:
+            raise SystemExit("[moe] FAIL: --expect-moe-fused on a dense "
+                             f"config ({cfg.name})")
+        if not engine.executed:
+            raise SystemExit("[moe] FAIL: MoE decode step is not executed "
+                             "through the program executor")
+        prog = engine.build_decode_program(
+            prefill_chunks=args.coresident_chunks)
+        bundles = [sorted(ms) for ms in prog.fused_members
+                   if any(m.startswith("moe_gmm") for m in ms)]
+        if not bundles:
+            raise SystemExit("[moe] FAIL: the grouped expert GMM is not "
+                             "co-resident in any fused launch of the "
+                             "decode program")
+        print("[moe] expert GMM co-resident in fused launch: "
+              + "; ".join("+".join(ms) for ms in bundles))
     reqs = build_requests(cfg, args)
     t0 = time.time()
     engine.run(reqs)
@@ -250,6 +275,10 @@ def main(argv=None):
               f"{st.fused_prefill_fraction:.0%} in a fused launch; "
               f"mean admission latency "
               f"{st.mean_admission_latency:.1f} steps")
+        if cfg.moe is not None and st.expert_hits:
+            print(f"[moe] expert hits {st.expert_hits} "
+                  f"(skew {st.expert_skew:.2f}), "
+                  f"{st.load_shed_steps} load-shed steps")
         if args.kv_block_size > 0:
             print(f"[paged-kv] block_size {engine.kv_block_size}, peak "
                   f"{st.blocks_in_use} blocks in use, "

@@ -51,24 +51,31 @@ def spec(cfg) -> dict:
     return out
 
 
-def capacity(cfg, n_tokens: int) -> int:
+def capacity(cfg, n_tokens: int, block: int = 8) -> int:
+    """Per-expert capacity for ``n_tokens`` routed tokens, aligned up to
+    ``block`` (the grouped-GMM token-block granularity).  ``int()``
+    truncates the fractional estimate to 0 for small batches (B=1 decode:
+    1 * top_k / E * cf < 1) — floor at 1 token *before* aligning so a
+    single decoding slot always has somewhere to dispatch."""
     m = cfg.moe
     c = int(n_tokens * m.top_k / m.num_experts * m.capacity_factor)
-    return max(8, -(-c // 8) * 8)          # multiple of 8, >= 8
+    c = max(1, c)                          # truncation floor (B=1 decode)
+    return -(-c // block) * block          # align to the GMM block
 
 
-def route(cfg, router_w, x2d) -> RouteResult:
-    """Top-k routing with sort-based capacity dispatch.
+def route_from_logits(cfg, logits) -> RouteResult:
+    """Top-k routing with sort-based capacity dispatch, from precomputed
+    router logits (T, E) fp32 — the serve executor plans the router matmul
+    as a kernel and feeds its output here through a binding slot.
 
-    x2d: (T, d).  Returns (E, C) dispatch indices into [0, T] where T means
-    "empty slot", plus combine weights and the Switch aux loss.
+    Returns (E, C) dispatch indices into [0, T] where T means "empty
+    slot", plus combine weights and the Switch aux loss.
     """
     m = cfg.moe
-    T = x2d.shape[0]
+    T = logits.shape[0]
     E, K = m.num_experts, m.top_k
     C = capacity(cfg, T)
 
-    logits = x2d.astype(jnp.float32) @ router_w          # (T, E)
     probs = jax.nn.softmax(logits, axis=-1)
     top_p, top_e = jax.lax.top_k(probs, K)               # (T, K)
     top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
@@ -98,6 +105,12 @@ def route(cfg, router_w, x2d) -> RouteResult:
     combine = combine.at[e_s, jnp.where(keep, pos_in_e, 0)].set(
         jnp.where(keep, w_s, 0.0), mode="drop")
     return RouteResult(dispatch, combine, aux)
+
+
+def route(cfg, router_w, x2d) -> RouteResult:
+    """Top-k routing from raw activations: x2d (T, d) @ router_w, then the
+    sort-based capacity dispatch of ``route_from_logits``."""
+    return route_from_logits(cfg, x2d.astype(jnp.float32) @ router_w)
 
 
 def expert_ffn(cfg, p, xe):

@@ -82,21 +82,32 @@ class PrefillBudget:
     tile the legacy wavefront prefill-FFN operand rows pad to.
     ``policy``: which prefilling slots chunk first when more are ready
     than ``max_coresident_chunks`` allows — ``"fifo"`` (lowest slot index,
-    the legacy order) or ``"srpf"`` (shortest-remaining-prefill-first:
+    the legacy order), ``"srpf"`` (shortest-remaining-prefill-first:
     prompts closest to completion chunk first, cutting mean admission
-    latency on mixed short/long traces; ties break by slot index)."""
+    latency on mixed short/long traces; ties break by slot index), or
+    ``"eload"`` (expert-load-aware: srpf ordering, but when the running
+    per-expert hit skew — ``ServeStats.expert_skew`` — reaches
+    ``skew_threshold`` the step sheds one coresident chunk, narrowing the
+    launch while the hot experts' weight streaming dominates the fused
+    bundle's memory phase; MoE executed path only — without expert stats
+    the skew stays 0 and eload degrades to srpf)."""
     chunk_rows: int = 2048
     max_coresident_chunks: int = 2
     pad_to: int = 128
     policy: str = "fifo"
+    skew_threshold: float = 1.5
 
     def __post_init__(self):
         for f_ in ("chunk_rows", "max_coresident_chunks", "pad_to"):
             if getattr(self, f_) < 1:
                 raise ValueError(f"PrefillBudget.{f_} must be >= 1")
-        if self.policy not in ("fifo", "srpf"):
+        if self.policy not in ("fifo", "srpf", "eload"):
             raise ValueError(
-                f"PrefillBudget.policy {self.policy!r} (fifo or srpf)")
+                f"PrefillBudget.policy {self.policy!r} "
+                "(fifo, srpf or eload)")
+        if self.skew_threshold < 1.0:
+            raise ValueError("PrefillBudget.skew_threshold must be >= 1.0 "
+                             "(1.0 means perfectly balanced experts)")
 
     def pad_rows(self, rows: int) -> int:
         """Rows of a prefill FFN operand: raw up to one tile, the next
@@ -161,6 +172,10 @@ class ServeStats:
     prefix_tokens_reused: int = 0  # prompt tokens whose prefill was skipped
     blocks_in_use: int = 0        # peak arena blocks mapped or cached
     evictions: int = 0            # prefix-cache blocks evicted under pressure
+    # MoE trajectory (executed path only; empty/zero for dense configs)
+    expert_hits: list = field(default_factory=list)  # per-expert routed
+    #                               decode-token count, layer-summed
+    load_shed_steps: int = 0      # steps where eload shed a coresident chunk
 
     @property
     def occupancy(self) -> float:
@@ -190,6 +205,26 @@ class ServeStats:
         skipped entirely (paged KV only)."""
         return self.prefix_tokens_reused / max(self.prompt_tokens, 1)
 
+    def add_expert_hits(self, counts) -> None:
+        """Accumulate one step's per-expert decode-token counts (an (E,)
+        vector off the device, summed over layers)."""
+        counts = [int(c) for c in counts]
+        if not self.expert_hits:
+            self.expert_hits = [0] * len(counts)
+        for i, c in enumerate(counts):
+            self.expert_hits[i] += c
+
+    @property
+    def expert_skew(self) -> float:
+        """Hottest expert's load relative to a perfectly balanced one:
+        max(hits) * E / sum(hits).  1.0 = balanced, E = every routed
+        token hit one expert; 0.0 until any hits land (dense configs,
+        or before the first decode step)."""
+        total = sum(self.expert_hits)
+        if not total:
+            return 0.0
+        return max(self.expert_hits) * len(self.expert_hits) / total
+
     def describe(self) -> dict:
         return {
             "steps": self.steps, "decode_steps": self.decode_steps,
@@ -207,6 +242,9 @@ class ServeStats:
             "prefix_hit_rate": round(self.prefix_hit_rate, 3),
             "blocks_in_use": self.blocks_in_use,
             "evictions": self.evictions,
+            "expert_hits": list(self.expert_hits),
+            "expert_skew": round(self.expert_skew, 3),
+            "load_shed_steps": self.load_shed_steps,
         }
 
 
@@ -218,11 +256,9 @@ def executable_decode_supported(cfg: ModelConfig) -> Optional[str]:
         return f"frontend {cfg.frontend!r} (token frontend only)"
     if len(runs) != 1 or runs[0].kind != ATTN:
         return "needs a single global-attention layer run"
-    if cfg.is_moe:
-        return "MoE FFN dispatch not yet routed through the executor"
     if cfg.norm != "rmsnorm":
         return f"norm {cfg.norm!r} (rmsnorm only)"
-    if cfg.d_ff <= 0:
+    if not cfg.is_moe and cfg.d_ff <= 0:
         return "no FFN"
     if cfg.activation not in ("silu", "gelu", "gelu_mlp", "relu2_mlp"):
         return f"activation {cfg.activation!r}"
@@ -304,6 +340,11 @@ class ServeEngine:
             if reason is not None:
                 raise ValueError("tensor-parallel serve: config not "
                                  f"executor-supported ({reason})")
+            if cfg.is_moe:
+                raise ValueError(
+                    "tensor-parallel serve: MoE expert weights are "
+                    "expert-major, not head/column-sharded — serve MoE "
+                    "single-device (expert parallelism is a ROADMAP item)")
             for what, dim in (("num_heads", cfg.num_heads),
                               ("num_kv_heads", cfg.num_kv_heads),
                               ("d_ff", cfg.d_ff)):
@@ -329,6 +370,9 @@ class ServeEngine:
             if reason is None and lm.layer_runs(cfg)[0].count > 1:
                 reason = ("the paged arena is single-layer — stacked runs "
                           "serve from the contiguous cache")
+            if reason is None and cfg.is_moe:
+                reason = ("MoE decode serves from the contiguous cache "
+                          "(the paged+MoE combination is untested)")
             if reason is not None:
                 raise ValueError(f"paged_kv: config not executor-supported "
                                  f"({reason}) — the vmapped fallback has no "
@@ -400,6 +444,10 @@ class ServeEngine:
                     and lm.layer_runs(cfg)[0].count > 1:
                 reason = ("stacked layer runs execute on the continuous "
                           "path only (wavefront keeps the hand-wired step)")
+            if reason is None and scheduling == "wavefront" and cfg.is_moe:
+                reason = ("MoE decode executes on the continuous path only "
+                          "(the wavefront co-prefill glue is dense-FFN "
+                          "shaped)")
             if reason is None:
                 # the executed decode program indexes the cache by the
                 # planned (128-aligned) length; ``cache_len`` exposes it —
@@ -515,7 +563,44 @@ class ServeEngine:
         proj = dataclasses.replace(
             proj, name="moe_router" if cfg.moe is not None else "ffn_proj")
         executable = executable_decode_supported(cfg) is None
-        if executable:
+        if executable and cfg.moe is not None:
+            # Executed MoE decode: the router projection and the grouped
+            # expert GMM (kernels/moe_gmm) are planner ops; the top-k /
+            # softmax / dispatch-gather / combine-scatter glue lives in the
+            # binding slots between them (build_decode_program).  The
+            # router's logits stay fp32 (its own matmul op) so the softmax
+            # and top-k see exactly what the vmapped fallback computes;
+            # capacity is static per program (capacity(cfg, B) — the same
+            # function route_from_logits resolves at trace time).
+            from repro.kernels.moe_gmm import moe_gmm_op
+            from repro.models import moe as moe_mod
+            m = cfg.moe
+            qkv = dataclasses.replace(
+                matmul_1d_op(M=B, K=d, N=(H + 2 * Hkv) * D, dtype=dt, bm=B),
+                name="qkv_proj")
+            proj = dataclasses.replace(
+                matmul_1d_op(M=B, K=d, N=m.num_experts,
+                             dtype=jnp.float32, bm=B),
+                name="moe_router")
+            gated = cfg.activation in ("silu", "gelu")
+            gmm = moe_gmm_op(
+                E=m.num_experts, C=moe_mod.capacity(cfg, B), d=d,
+                f=m.d_ff_expert, dtype=dt,
+                act=cfg.activation if gated else "gelu", gated=gated)
+            if getattr(self, "stitch_epilogues", True):
+                norm1 = dataclasses.replace(norm1,
+                                            epilogue=(qkv.name, "x"))
+            # the expert GMM sits at the end of the decode dependency
+            # chain, so its fused partners are the independent prefill
+            # chunks — expert weight streaming (memory-bound) riding the
+            # chunk's compute-bound attention, the paper's pairing
+            graph = [planner.GraphOp(norm1),
+                     planner.GraphOp(qkv, deps=frozenset({norm1.name})),
+                     planner.GraphOp(att, deps=frozenset({qkv.name})),
+                     planner.GraphOp(norm2, deps=frozenset({att.name})),
+                     planner.GraphOp(proj, deps=frozenset({norm2.name})),
+                     planner.GraphOp(gmm, deps=frozenset({proj.name}))]
+        elif executable:
             # Executor-supported configs plan the QKV projection and the FFN
             # activation as graph ops (not binding glue), so each
             # producer→consumer pair can stitch into one launch.  Stitched or
@@ -556,10 +641,13 @@ class ServeEngine:
                      planner.GraphOp(proj, deps=frozenset({norm2.name}))]
         if ffn_rows:
             # the wavefront co-prefill partner is a full-FFN-width matmul
-            # (compute-bound at scale) — for MoE that is the expert FFN, not
-            # the tiny router projection the decode side plans
-            pf_n = (max(cfg.d_ff, d) if cfg.moe is not None
-                    else _ffn_in_width(cfg))
+            # (compute-bound at scale) — for MoE that is the *expert* FFN
+            # in-projection (gate+up fused when gated), not the tiny router
+            # projection the decode side plans and not the dense cfg.d_ff
+            pf_n = ((2 * cfg.moe.d_ff_expert
+                     if cfg.activation in ("silu", "gelu")
+                     else cfg.moe.d_ff_expert)
+                    if cfg.moe is not None else _ffn_in_width(cfg))
             pf = matmul_1d_op(M=ffn_rows, K=d, N=pf_n,
                               dtype=dt, bm=min(128, ffn_rows))
             pf = dataclasses.replace(pf, name="prefill_ffn")
@@ -745,16 +833,78 @@ class ServeEngine:
                           "l": "attn_l"})
         reg.bind("decode_norm2", x="h_mid", scale="norm2_scale",
                  outputs={"out": "h2"})
-        proj_name = "moe_router" if cfg.moe is not None else "ffn_proj"
-        chain2 = stitch.chain_label(proj_name, "decode_act")
-        if chain2 in plan_names:
-            reg.bind(chain2, x="h2", w="w_in",
-                     outputs={"out": Slot(put=act_put)})
+        gmm_name = next((g.op.name for g in graph
+                         if g.op.name.startswith("moe_gmm")), None)
+        if gmm_name is not None:
+            # MoE: the router matmul and the grouped expert GMM are planner
+            # ops; everything between them — softmax/top-k, the sort-based
+            # capacity dispatch, the combine scatter — is binding glue.
+            # Both glue bodies mirror models/moe.apply() line for line
+            # (same fp32 logits, same dt combine multiply, same
+            # expert-major scatter-add order) so the executed path is
+            # token-for-token the vmapped fallback.
+            from repro.models import moe as moe_mod
+            m = cfg.moe
+
+            def router_put(state, logits):
+                # logits (B, E) fp32 straight off the planned matmul
+                r = moe_mod.route_from_logits(cfg, logits)
+                state = dict(state)
+                h_pad = jnp.concatenate(
+                    [state["h2"], jnp.zeros((1, d), state["h2"].dtype)])
+                state["moe_xe"] = h_pad[r.dispatch_idx]      # (E, C, d)
+                state["moe_dispatch"] = r.dispatch_idx
+                state["moe_combine"] = r.combine_w
+                # per-expert hit counts over *decoding* slots only — the
+                # act mask zeroes prefilling/idle rows and the B-index
+                # padding row, so the host-side load stats see real load
+                act_pad = jnp.concatenate(
+                    [state["act"].astype(jnp.int32),
+                     jnp.zeros((1,), jnp.int32)])
+                state["expert_counts"] = act_pad[r.dispatch_idx].sum(axis=1)
+                return state
+
+            def gmm_put(state, ye):
+                # combine: weight each expert row, scatter-add back to its
+                # token (expert-major order, matching apply()); shared
+                # experts run dense on the same normed hidden
+                state = dict(state)
+                ye = ye * state["moe_combine"][..., None].astype(ye.dtype)
+                out = jnp.zeros((B + 1, d), ye.dtype).at[
+                    state["moe_dispatch"].reshape(-1)].add(
+                    ye.reshape(-1, d))[:B]
+                if m.num_shared_experts:
+                    h = state["h2"] @ state["shared_w_in"]
+                    if cfg.activation in ("silu", "gelu"):
+                        g_, u_ = jnp.split(h, 2, axis=-1)
+                        h = (jax.nn.silu(g_) if cfg.activation == "silu"
+                             else jax.nn.gelu(g_)) * u_
+                    else:
+                        h = jax.nn.gelu(h)
+                    out = out + h @ state["shared_w_out"]
+                state["x_out"] = state["h_mid"] + out.astype(dt)  # residual 2
+                return state
+
+            # the router reads h2 widened to fp32 — exactly the fallback's
+            # x2d.astype(float32) @ router_w
+            reg.bind("moe_router",
+                     inputs={"x": Slot(get=lambda s:
+                                       s["h2"].astype(jnp.float32)),
+                             "w": "w_router"},
+                     outputs={"out": Slot(put=router_put)})
+            reg.bind(gmm_name, xe="moe_xe", w_in="w_in", w_out="w_out",
+                     outputs={"ye": Slot(put=gmm_put)})
         else:
-            reg.bind(proj_name, x="h2", w="w_in",
-                     outputs={"out": "h_ffn"})
-            reg.bind("decode_act", h="h_ffn",
-                     outputs={"out": Slot(put=act_put)})
+            proj_name = "moe_router" if cfg.moe is not None else "ffn_proj"
+            chain2 = stitch.chain_label(proj_name, "decode_act")
+            if chain2 in plan_names:
+                reg.bind(chain2, x="h2", w="w_in",
+                         outputs={"out": Slot(put=act_put)})
+            else:
+                reg.bind(proj_name, x="h2", w="w_in",
+                         outputs={"out": "h_ffn"})
+                reg.bind("decode_act", h="h_ffn",
+                         outputs={"out": Slot(put=act_put)})
         if ffn_rows:
             reg.bind("prefill_ffn", x="pf_h2", w="w_in", outputs={"out": "pf_ffn"})
         for g in graph:
@@ -787,14 +937,26 @@ class ServeEngine:
         scan over stacked runs feeds per-layer slices of both); ``pos`` is
         the per-slot position vector (B,), ``act`` the per-slot decoding
         mask (B,) bool gating the decode k/v scatter."""
-        return {
+        state = {
             "x": x, "pos": pos, "act": act,
             "norm1_scale": p["norm1"]["scale"].reshape(1, -1),
             "norm2_scale": p["norm2"]["scale"].reshape(1, -1),
             "w_qkv": p["attn"]["w_qkv"], "w_o": p["attn"]["w_o"],
-            "w_in": p["mlp"]["w_in"], "w_out": p["mlp"]["w_out"],
             "k_cache": kv["k"], "v_cache": kv["v"],
         }
+        if "moe" in p:
+            # expert-major leaves: the router projection plus the grouped
+            # GMM's (E, d, fin)/(E, f, d) weight stacks (models/moe.spec)
+            state["w_router"] = p["moe"]["router"]
+            state["w_in"] = p["moe"]["w_in"]
+            state["w_out"] = p["moe"]["w_out"]
+            if self.cfg.moe.num_shared_experts:
+                state["shared_w_in"] = p["moe"]["shared_w_in"]
+                state["shared_w_out"] = p["moe"]["shared_w_out"]
+        else:
+            state["w_in"] = p["mlp"]["w_in"]
+            state["w_out"] = p["mlp"]["w_out"]
+        return state
 
     def _slot_state(self, params, cache, x, pos, act):
         """Single-layer form of ``_layer_state`` over the full param/cache
@@ -1102,8 +1264,10 @@ class ServeEngine:
         self.cb_program_info[n] = {
             "fused_launches": program.n_fused,
             "total_launches": len(program.steps),
+            "fused_members": [sorted(ms) for ms in program.fused_members],
             "steps": program.describe(),
         }
+        is_moe = cfg.moe is not None
 
         def layer_step(p, kv, x, pos, act, bt, chs, ch_slots, ch_offs):
             """One transformer layer over the whole slot state: the decode
@@ -1172,15 +1336,25 @@ class ServeEngine:
                 if tp > 1:
                     attn_out = jax.lax.psum(attn_out, axis)
                 xm = chs[i] + attn_out
-                h2 = layers.apply_norm(cfg, p["norm2"], xm[None])[0]
-                ff = _mlp_from_h(cfg, h2 @ p["mlp"]["w_in"],
-                                 p["mlp"]["w_out"])
+                h2 = layers.apply_norm(cfg, p["norm2"], xm[None])
+                if is_moe:
+                    # chunk rows route jointly (T = C), same jnp path as
+                    # the fallback's whole-prompt prefill — at the serving
+                    # capacities in play (capacity(cfg, C) >= C) neither
+                    # batching ever drops a token, so outputs are exact
+                    ff = lm._apply_ffn(cfg, p, h2, True)[0][0]
+                else:
+                    ff = _mlp_from_h(cfg, h2[0] @ p["mlp"]["w_in"],
+                                     p["mlp"]["w_out"])
                 if tp > 1:
                     ff = jax.lax.psum(ff, axis)
                 new_chs.append(xm + ff)
-            return (state["x_out"],
-                    {"k": state["k_cache"], "v": state["v_cache"]},
-                    tuple(new_chs))
+            ret = (state["x_out"],
+                   {"k": state["k_cache"], "v": state["v_cache"]},
+                   tuple(new_chs))
+            if is_moe:
+                ret += (state["expert_counts"],)
+            return ret
 
         def core(params, cache, tokens, active, *rest):
             rest = list(rest)
@@ -1194,10 +1368,29 @@ class ServeEngine:
                                  {"tokens": ch_tokens[i][None]})[0][0]
                 for i in range(n))
             pos = cache["pos"]
+            ecounts = None
             if L == 1:
-                x1, kv_new, chs = layer_step(
+                out = layer_step(
                     params[run.name], cache[run.name], x[:, 0], pos,
                     active, bt, chs, ch_slots, ch_offs)
+                if is_moe:
+                    x1, kv_new, chs, ecounts = out
+                else:
+                    x1, kv_new, chs = out
+            elif is_moe:
+                # the scan carries a per-expert hit accumulator so the
+                # host sees layer-summed counts per step
+                def body(carry, xs):
+                    xc, chc, cnt = carry
+                    p_l, kv_l = xs
+                    xn, kv_out, chn, c_l = layer_step(p_l, kv_l, xc, pos,
+                                                      active, bt, chc,
+                                                      ch_slots, ch_offs)
+                    return (xn, chn, cnt + c_l), kv_out
+                (x1, chs, ecounts), kv_new = maybe_scan(
+                    body, (x[:, 0], chs,
+                           jnp.zeros((cfg.moe.num_experts,), jnp.int32)),
+                    (params[run.name], cache[run.name]), length=L)
             else:
                 def body(carry, xs):
                     xc, chc = carry
@@ -1215,8 +1408,9 @@ class ServeEngine:
             logits = lm._head(cfg, params, xf)[:, 0]
             new_pos = jnp.where(active, pos + 1, pos)
             new_cache = {"pos": new_pos, run.name: kv_new}
+            moe_tail = (ecounts,) if is_moe else ()
             if not n:
-                return logits, new_cache
+                return (logits, new_cache) + moe_tail
 
             # the (possibly partial) chunk's last valid row -> first-token
             # logits; positions advance by the chunk's valid rows
@@ -1230,7 +1424,7 @@ class ServeEngine:
                 new_pos = new_pos.at[ch_slots[i]].set(ch_offs[i]
                                                       + ch_valid[i])
             new_cache["pos"] = new_pos
-            return logits, new_cache, jnp.stack(pf_logits)
+            return (logits, new_cache, jnp.stack(pf_logits)) + moe_tail
 
         if tp > 1:
             from repro.distributed.compat import shard_map
@@ -1382,6 +1576,7 @@ class ServeEngine:
         budget = self.prefill_budget
         pool = self.kv_pool
         paged = pool is not None
+        is_moe = self.cfg.moe is not None
         C = budget.effective_chunk(
             self.cache_len if paged else self._aligned_len(),
             multiple=self.kv_block_size if paged else 1)
@@ -1439,10 +1634,19 @@ class ServeEngine:
             # behind a long prompt's tail; slot index breaks ties, keeping
             # the schedule deterministic.
             sel = [b for b in sorted(pref) if pref[b]["ready"] <= step_i]
-            if budget.policy == "srpf":
+            if budget.policy in ("srpf", "eload"):
                 sel.sort(key=lambda b: (len(pref[b]["req"].prompt)
                                         - pref[b]["done"], b))
             sel = sel[:budget.max_coresident_chunks]
+            # eload: when the running expert-hit skew says a few hot
+            # experts dominate the decode side's weight streaming, shed
+            # one coresident chunk this step — the fused launch narrows
+            # so the memory phase the hot experts already saturate isn't
+            # stretched further by an extra prefill partner
+            if (budget.policy == "eload" and len(sel) > 1
+                    and self.stats.expert_skew >= budget.skew_threshold):
+                sel = sel[:-1]
+                stats.load_shed_steps += 1
             if paged:
                 # map the chunk's pages before its scatter; a chunk the
                 # arena cannot back this step (even after eviction) simply
@@ -1497,7 +1701,7 @@ class ServeEngine:
                     ch_tok[j, :ch_valid[j]] = np.asarray(
                         pref[b]["req"].prompt[off:off + ch_valid[j]],
                         np.int32)
-                logits, cache, pf_logits = self._cb_step(n)(
+                ret = self._cb_step(n)(
                     self._step_params, cache, jnp.asarray(last),
                     jnp.asarray(active),
                     *((bt_dev,) if paged else ()),
@@ -1507,11 +1711,21 @@ class ServeEngine:
                                    np.int32)),
                     ch_valid=jnp.asarray(np.asarray(ch_valid, np.int32)),
                     ch_tokens=jnp.asarray(ch_tok))
+                if is_moe:
+                    logits, cache, pf_logits, ecounts = ret
+                else:
+                    logits, cache, pf_logits = ret
             else:
-                logits, cache = self._cb_step(0)(
+                ret = self._cb_step(0)(
                     self._step_params, cache, jnp.asarray(last),
                     jnp.asarray(active),
                     *((bt_dev,) if paged else ()))
+                if is_moe:
+                    logits, cache, ecounts = ret
+                else:
+                    logits, cache = ret
+            if is_moe:
+                stats.add_expert_hits(np.asarray(ecounts))
 
             stats.steps += 1
             if n_active:

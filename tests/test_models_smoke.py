@@ -74,6 +74,7 @@ def test_full_config_exact_dims(arch):
         "granite-3-2b": (40, 2048, 32, 8, 8192, 49_155),
         "deepseek-v2-236b": (60, 5120, 128, 128, 1536, 102_400),
         "phi3.5-moe-42b-a6.6b": (32, 4096, 32, 8, 6400, 32_064),
+        "phi3.5-moe-rms": (32, 4096, 32, 8, 6400, 32_064),
         "musicgen-medium": (48, 1536, 24, 24, 6144, 2048),
     }
     L, d, H, kv, ff, V = table[arch]
